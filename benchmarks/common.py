@@ -1,0 +1,51 @@
+"""Shared benchmark utilities — timing, CSV output, standard problems."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (post-compile)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def layer_problem(c: int, b: int, a: int = 0, seed: int = 0):
+    """Standard (w, h) pruning problem with heavy-tailed calibration."""
+    a = a or 2 * b
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(c, b)), jnp.float32)
+    scales = rng.lognormal(0.0, 1.0, size=(b,))
+    x = (rng.normal(size=(a, b)) * scales[None, :]).astype(np.float32)
+    h = jnp.asarray(2.0 * x.T @ x)
+    return w, h
+
+
+def recon_error(w0, w1, h) -> float:
+    d = np.asarray(w1, np.float64) - np.asarray(w0, np.float64)
+    return float(np.einsum("ib,bk,ik->", d, 0.5 * np.asarray(h, np.float64),
+                           d))
+
+
+def emit(rows: list[dict], header: str):
+    """Print a csv-ish table."""
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(f"# {header}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(
+            f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+    print()

@@ -1,0 +1,63 @@
+"""Fig. 1 — quality vs sparsity for Wanda / SparseGPT / Thanos.
+
+(a) unstructured sweep p ∈ {0.3..0.8} on a reduced OPT-125M-class model,
+(b) structured sweep p ∈ {0.1..0.4} (α = 0 and 0.1).
+
+The offline proxy for WikiText-2 perplexity is held-out synthetic CE loss
+(DESIGN.md §7.4); the paper's claim under test is the *ordering* of methods
+and its widening with structured sparsity.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.registry import get_config
+from repro.core import PruneConfig, prune_model
+from repro.data.pipeline import calibration_batches, heldout_loss
+from repro.models.model_builder import ModelAdapter, build_model
+
+
+def run(quick: bool = True):
+    from benchmarks.table2_quality import _pretrain
+
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    model = build_model(cfg)
+    params = _pretrain(model, cfg, steps=120 if quick else 300)
+    batches = calibration_batches(cfg, num_samples=16, seq_len=64, batch=8)
+    dense = heldout_loss(model, params, cfg, num_batches=2, seq_len=64)
+
+    rows = []
+    ps_u = (0.5,) if quick else (0.3, 0.4, 0.5, 0.6, 0.7, 0.8)
+    for p in ps_u:
+        for method in ("wanda", "sparsegpt", "thanos"):
+            pruned, _ = prune_model(
+                params, ModelAdapter(model), batches,
+                PruneConfig(method=method, p=p, block_size=32))
+            rows.append({
+                "pattern": "unstructured", "p": p, "method": method,
+                "alpha": 0.0, "dense_loss": dense,
+                "loss": heldout_loss(model, pruned, cfg, num_batches=2,
+                                     seq_len=64),
+            })
+
+    ps_s = (0.3,) if quick else (0.1, 0.2, 0.3, 0.4)
+    for p in ps_s:
+        for method, alpha in (("wanda", 0.0), ("sparsegpt", 0.0),
+                              ("thanos", 0.0), ("thanos", 0.1)):
+            pruned, _ = prune_model(
+                params, ModelAdapter(model), batches,
+                PruneConfig(method=method, pattern="structured", p=p,
+                            alpha=alpha))
+            rows.append({
+                "pattern": "structured", "p": p, "method": method,
+                "alpha": alpha, "dense_loss": dense,
+                "loss": heldout_loss(model, pruned, cfg, num_batches=2,
+                                     seq_len=64),
+            })
+    emit(rows, "fig1: held-out CE loss vs sparsity (lower = better)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,44 @@
+"""Fig. 9 — pruning wall time vs layer size, Thanos vs SparseGPT vs Wanda.
+
+Paper claim (Appendix H): Thanos is faster than SparseGPT for structured
+sparsity (single multi-column solve vs column-by-column sweeps), and
+competitive at small scale for unstructured/2:4.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, layer_problem, timeit
+from repro.core import PruneConfig, prune_layer
+
+
+def run(quick: bool = True):
+    sizes = ((256, 256), (512, 512)) if quick else (
+        (256, 256), (512, 512), (1024, 1024), (2048, 2048))
+    rows = []
+    for c, b in sizes:
+        w, h = layer_problem(c, b)
+        for method in ("wanda", "sparsegpt", "thanos"):
+            for pattern, kw in (("unstructured", dict(p=0.5, block_size=128)),
+                                ("structured", dict(p=0.3, alpha=0.0)),
+                                ("nm", dict(n=2, m=4, block_size=128))):
+                cfgp = PruneConfig(method=method, pattern=pattern, **kw)
+                t = timeit(lambda: prune_layer(w, h, cfgp), iters=2)
+                rows.append({"c": c, "b": b, "method": method,
+                             "pattern": pattern, "seconds": t})
+    emit(rows, "fig9: pruning wall time per layer (CPU; relative ordering)")
+
+    # structured: thanos faster than sparsegpt at every size
+    ok = all(
+        next(r["seconds"] for r in rows
+             if r["c"] == c and r["method"] == "thanos"
+             and r["pattern"] == "structured")
+        < next(r["seconds"] for r in rows
+               if r["c"] == c and r["method"] == "sparsegpt"
+               and r["pattern"] == "structured")
+        for c, _ in sizes)
+    print(f"CHECK thanos faster than sparsegpt (structured): "
+          f"{'PASS' if ok else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,65 @@
+"""§Roofline — aggregate the dry-run grid into the per-(arch × cell × mesh)
+three-term roofline table (reads experiments/dryrun/*.json written by
+``python -m repro.launch.dryrun``)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+V5E_HBM = 16e9  # bytes per chip
+
+
+def load(dirname: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(dirname: str = "experiments/dryrun"):
+    recs = load(dirname)
+    if not recs:
+        print("# no dry-run records found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+        return []
+    rows = []
+    for r in recs:
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        hbm_per_dev = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0)
+                       - mem.get("alias_size_in_bytes", 0))
+        rows.append({
+            "arch": r["arch"], "cell": r["cell"], "mesh": r["mesh"],
+            "compute_ms": t["compute_s"] * 1e3,
+            "memory_ms": t["memory_s"] * 1e3,
+            "collective_ms": t["collective_s"] * 1e3,
+            "bottleneck": r["bottleneck"].replace("_s", ""),
+            "mfu": r["roofline_mfu"],
+            "useful_frac": r.get("useful_fraction", 0.0),
+            "dev_GB": hbm_per_dev / 1e9,
+            "fits_v5e": "Y" if hbm_per_dev <= V5E_HBM else "OVER",
+            "compile_s": r["compile_s"],
+        })
+    rows.sort(key=lambda x: (x["mesh"], x["arch"], x["cell"]))
+    emit(rows, "roofline grid (terms in ms per step; mfu = model-flops "
+               "utilization at the roofline-limiting term)")
+    worst = sorted(rows, key=lambda x: x["mfu"])[:5]
+    print("# 5 worst roofline fractions (hillclimb candidates):")
+    for w in worst:
+        print(f"#   {w['arch']} {w['cell']} {w['mesh']}: mfu={w['mfu']:.4f} "
+              f"bottleneck={w['bottleneck']}")
+    coll = [r for r in rows if r["bottleneck"] == "collective"]
+    if coll:
+        print("# collective-bound cells:")
+        for w in coll:
+            print(f"#   {w['arch']} {w['cell']} {w['mesh']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

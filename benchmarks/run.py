@@ -1,0 +1,60 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run           # quick mode
+    PYTHONPATH=src python -m benchmarks.run --full    # paper-scale sweeps
+
+Table→module map:
+    Fig. 1   quality vs sparsity          fig1_sparsity_sweep
+    Table 2  methods × patterns quality   table2_quality
+    Table 3  zero-shot proxy              table3_zeroshot_proxy
+    Table 5  blocksize sweep              table5_blocksize
+    Fig. 9   pruning wall time            fig9_timing
+    §4.8     n:m decode roofline          nm_decode_roofline
+    §Roofline dry-run grid aggregation    roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        fig1_sparsity_sweep, fig9_timing, nm_decode_roofline, roofline,
+        table2_quality, table3_zeroshot_proxy, table5_blocksize,
+    )
+
+    suites = [
+        ("fig1", lambda: fig1_sparsity_sweep.run(quick=quick)),
+        ("table2", lambda: table2_quality.run(quick=quick)),
+        ("table3", lambda: table3_zeroshot_proxy.run(quick=quick)),
+        ("table5", lambda: table5_blocksize.run(quick=quick)),
+        ("fig9", lambda: fig9_timing.run(quick=quick)),
+        ("nm_decode", lambda: nm_decode_roofline.run(quick=quick)),
+        ("roofline", roofline.run),
+    ]
+    failures = []
+    for name, fn in suites:
+        if args.only and name not in args.only.split(","):
+            continue
+        t0 = time.perf_counter()
+        print(f"==== {name} ====")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"BENCH-FAIL {name}: {e!r}")
+        print(f"==== {name} done in {time.perf_counter() - t0:.1f}s ====\n")
+    if failures:
+        sys.exit(f"{len(failures)} benchmark(s) failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Table 2 — quality proxy for all methods × sparsity patterns.
+
+Rows: method × {unstructured 50%, structured 30% (α=0, 0.1), 4:8, 2:4
+(α=0, 0.1)}.  Offline proxy: held-out synthetic-CE (DESIGN.md §7.4); the
+claims under test are the paper's orderings:
+  * structured:  Thanos(α=.1) < Thanos(α=0) < SparseGPT < Wanda,
+  * semi-struct: Thanos(α=.1) best, Thanos(α=0) ≥ SparseGPT ~ tie,
+  * unstructured: Thanos ≈ SparseGPT < Wanda ≪ Magnitude.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.registry import get_config
+from repro.core import PruneConfig, prune_model
+from repro.data.pipeline import calibration_batches, heldout_loss
+from repro.models.model_builder import ModelAdapter, build_model
+
+CELLS = [
+    ("unstruct50", dict(pattern="unstructured", p=0.5),
+     ("magnitude", "wanda", "sparsegpt", "thanos")),
+    ("struct30_a0", dict(pattern="structured", p=0.3, alpha=0.0),
+     ("wanda", "sparsegpt", "thanos")),
+    ("struct30_a01", dict(pattern="structured", p=0.3, alpha=0.1),
+     ("thanos",)),
+    ("nm4:8_a0", dict(pattern="nm", n=4, m=8, block_size=64),
+     ("magnitude", "wanda", "sparsegpt", "thanos")),
+    ("nm4:8_a01", dict(pattern="nm", n=4, m=8, alpha=0.1, block_size=64),
+     ("thanos",)),
+    ("nm2:4_a0", dict(pattern="nm", n=2, m=4, block_size=64),
+     ("magnitude", "wanda", "sparsegpt", "thanos")),
+    ("nm2:4_a01", dict(pattern="nm", n=2, m=4, alpha=0.1, block_size=64),
+     ("thanos",)),
+]
+
+
+def _pretrain(model, cfg, steps: int):
+    """Brief training so pruning has structure to preserve — orderings on
+    random weights are pure noise (the paper prunes trained models)."""
+    from repro.data.pipeline import SyntheticCorpus, TrainStream
+    from repro.optim import AdamW
+    from repro.optim.schedules import cosine_warmup
+    from repro.train.step import make_train_step
+
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size)
+    stream = TrainStream(corpus, global_batch=8, seq_len=64)
+    opt = AdamW(weight_decay=0.01, clip_norm=1.0)
+    step = make_train_step(model, opt, cosine_warmup(2e-3, 10, steps),
+                           remat="none", donate=False)
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    for i in range(steps):
+        params, state, _ = step(params, state, stream.batch_at(i))
+    return params
+
+
+def run(arch: str = "tinyllama-1.1b", quick: bool = True):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = _pretrain(model, cfg, steps=120 if quick else 300)
+    batches = calibration_batches(cfg, num_samples=16, seq_len=64, batch=8)
+    dense = heldout_loss(model, params, cfg, num_batches=2, seq_len=64)
+
+    rows = [{"cell": "dense", "method": "-", "loss": dense, "delta": 0.0}]
+    cells = CELLS if not quick else [CELLS[0], CELLS[1], CELLS[2],
+                                     CELLS[5], CELLS[6]]
+    for name, kw, methods in cells:
+        for method in methods:
+            if method == "magnitude" and kw.get("alpha"):
+                continue
+            pruned, _ = prune_model(
+                params, ModelAdapter(model), batches,
+                PruneConfig(method=method, **kw))
+            loss = heldout_loss(model, pruned, cfg, num_batches=2,
+                                seq_len=64)
+            rows.append({"cell": name, "method": method, "loss": loss,
+                         "delta": loss - dense})
+    emit(rows, f"table2: {arch} held-out CE (proxy for WikiText-2 ppl)")
+
+    by = {(r["cell"], r["method"]): r["loss"] for r in rows}
+    checks = []
+    if ("struct30_a0", "thanos") in by and ("struct30_a0", "wanda") in by:
+        checks.append(("thanos<wanda (struct)",
+                       by[("struct30_a0", "thanos")]
+                       < by[("struct30_a0", "wanda")]))
+    if ("struct30_a01", "thanos") in by:
+        # the paper's α benefit comes from real outlier rows at 1B+ scale;
+        # at reduced scale we check it does not HURT (±2% band) and report
+        # the delta for the full-scale comparison
+        a0 = by[("struct30_a0", "thanos")]
+        a1 = by[("struct30_a01", "thanos")]
+        checks.append((f"alpha=.1 within noise of alpha=0 "
+                       f"(d={a1 - a0:+.4f})", a1 <= a0 * 1.02))
+    if ("nm2:4_a0", "thanos") in by:
+        checks.append(("thanos<wanda (2:4)",
+                       by[("nm2:4_a0", "thanos")]
+                       < by[("nm2:4_a0", "wanda")]))
+    for name, ok in checks:
+        print(f"CHECK {name}: {'PASS' if ok else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

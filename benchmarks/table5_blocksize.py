@@ -1,0 +1,52 @@
+"""Table 5 — Thanos blocksize sweep B ∈ {8..b} on TinyLlama-class layers.
+
+Paper finding: unstructured quality is ~flat in B; n:m quality *improves*
+with larger B (bigger blocks = more in-block communication).  We measure
+both the layer-wise reconstruction error and the pruning wall time.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, layer_problem, recon_error, timeit
+from repro.core.thanos import prune_nm, prune_unstructured
+
+
+def run(quick: bool = True):
+    c, b = (256, 512) if quick else (512, 2048)
+    w, h = layer_problem(c, b)
+    blocks = (16, 64, 128) if quick else (8, 64, 128, 256, 512, 1024, 2048)
+
+    rows = []
+    for B in blocks:
+        if B > b:
+            continue
+        res = prune_unstructured(w, h, p=0.5, block_size=B)
+        t = timeit(lambda: prune_unstructured(w, h, p=0.5, block_size=B))
+        rows.append({"pattern": "unstruct50", "B": B,
+                     "recon_err": recon_error(w, res.weights, h),
+                     "seconds": t})
+    for B in blocks:
+        if B > b or B % 8:
+            continue
+        res = prune_nm(w, h, n=2, m=4, block_size=B)
+        t = timeit(lambda: prune_nm(w, h, n=2, m=4, block_size=B))
+        rows.append({"pattern": "nm2:4", "B": B,
+                     "recon_err": recon_error(w, res.weights, h),
+                     "seconds": t})
+    emit(rows, "table5: blocksize sweep (recon error + wall time)")
+
+    # paper check: 2:4 error at max B ≤ error at min B; unstruct ~flat
+    nm = [r for r in rows if r["pattern"] == "nm2:4"]
+    un = [r for r in rows if r["pattern"] == "unstruct50"]
+    if len(nm) >= 2:
+        print(f"CHECK nm error shrinks with B: "
+              f"{'PASS' if nm[-1]['recon_err'] <= nm[0]['recon_err'] * 1.02 else 'FAIL'}")
+    if len(un) >= 2:
+        spread = (max(r["recon_err"] for r in un)
+                  / min(r["recon_err"] for r in un))
+        print(f"CHECK unstructured flat in B (spread {spread:.3f}): "
+              f"{'PASS' if spread < 1.05 else 'FAIL'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

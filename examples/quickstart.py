@@ -1,0 +1,39 @@
+"""Quickstart: prune one linear layer with Thanos in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import PruneConfig, prune_layer, reconstruction_error
+from repro.core.hessian import HessianAccumulator
+
+# a layer W (out=c, in=b) and some calibration activations X (tokens, b)
+key = jax.random.PRNGKey(0)
+c, b, tokens = 512, 1024, 4096
+w = jax.random.normal(key, (c, b)) * 0.02
+x = jax.random.normal(jax.random.fold_in(key, 1), (tokens, b))
+
+# 1. accumulate the layer Hessian H = 2·XᵀX over calibration batches
+acc = HessianAccumulator.init(b)
+for chunk in jnp.split(x, 4):
+    acc = acc.update(chunk)
+h = acc.finalize(mean=False)
+
+# 2. prune — Thanos block-wise unstructured at 50% (paper Alg. 1)
+res = prune_layer(w, h, PruneConfig(method="thanos", p=0.5, block_size=128))
+print(f"sparsity: {float(jnp.mean(res.mask)):.3f}")
+print(f"reconstruction error ‖(Ŵ−W)X‖²: "
+      f"{float(reconstruction_error(w, res.weights, h)):.4f}")
+
+# 3. compare against the baselines on the same layer
+for method in ("sparsegpt", "wanda", "magnitude"):
+    r = prune_layer(w, h, PruneConfig(method=method, p=0.5, block_size=128))
+    print(f"{method:10s} error: "
+          f"{float(reconstruction_error(w, r.weights, h)):.4f}")
+
+# 4. hardware-friendly 2:4 with outlier-row protection (paper §4.8 + §4.7.1)
+r24 = prune_layer(w, h, PruneConfig(method="thanos", pattern="nm",
+                                    n=2, m=4, alpha=0.1, block_size=512))
+print(f"2:4 α=0.1 sparsity: {float(jnp.mean(r24.mask)):.3f} "
+      f"error: {float(reconstruction_error(w, r24.weights, h)):.4f}")

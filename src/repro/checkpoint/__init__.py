@@ -1,0 +1,11 @@
+"""Sharded, atomic, elastically-restorable checkpointing (from scratch)."""
+from repro.checkpoint.checkpointer import (
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager", "latest_step", "load_checkpoint", "save_checkpoint",
+]

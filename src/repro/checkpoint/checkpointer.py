@@ -1,0 +1,227 @@
+"""From-scratch sharded checkpointer with atomic manifests.
+
+Layout of one checkpoint:
+
+    <dir>/step_000123/
+        manifest.json        tree structure, leaf→shard map, dtypes, step
+        shard_00000.npz      leaf arrays (split by leading axis over shards)
+        shard_00001.npz
+        ...
+
+Design points (1000-node posture, simulated single-process here):
+
+* **Atomicity** — everything is written into ``step_X.tmp`` and renamed to
+  ``step_X`` only after the manifest is fsync'd.  A crash mid-save leaves at
+  most a ``.tmp`` directory that restore ignores and the next save replaces.
+* **Sharding** — leaves larger than ``shard_threshold`` elements are split
+  along axis 0 into ``num_shards`` pieces (per-host files in a real cluster).
+  The manifest records the split so restore can reassemble.
+* **Elastic restore** — the manifest stores *logical* (unsharded) shapes.
+  Restore returns full logical arrays; the caller re-shards onto whatever
+  mesh it currently has (``jax.device_put(x, sharding)``), so the mesh may
+  change between save and restore.
+* **Retention** — ``keep_last`` old steps are retained; older ones pruned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in sorted(tree.items(), key=lambda kv: str(kv[0])):
+            out.update(_flatten(v, prefix + (str(k),)))
+        return out
+    if isinstance(tree, (tuple, list)) and not hasattr(tree, "shape"):
+        out = {}
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, prefix + (str(i),)))
+        return out
+    return {SEP.join(prefix): tree}
+
+
+def _key_to_path(key: str) -> list[str]:
+    return key.split(SEP)
+
+
+def _unflatten(flat: dict, treedef_meta: dict):
+    """Rebuild nested dicts (int keys restored where manifest says so)."""
+    root: dict = {}
+    for key, leaf in flat.items():
+        parts = _key_to_path(key)
+        node = root
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = leaf
+
+    int_keys = set(treedef_meta.get("int_key_paths", []))
+
+    def fix(node, prefix=()):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            key_path = SEP.join(prefix + (k,))
+            kk = int(k) if key_path in int_keys else k
+            out[kk] = fix(v, prefix + (k,))
+        return out
+
+    return fix(root)
+
+
+def _int_key_paths(tree, prefix=()):
+    """Record which dict keys were ints so restore round-trips exactly."""
+    paths = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            p = prefix + (str(k),)
+            if isinstance(k, int):
+                paths.append(SEP.join(p))
+            paths.extend(_int_key_paths(v, p))
+    return paths
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree,
+    *,
+    num_shards: int = 4,
+    shard_threshold: int = 1 << 16,
+    keep_last: int = 3,
+) -> str:
+    """Write one atomic checkpoint; returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten(tree)
+    manifest = {
+        "step": step,
+        "format": 1,
+        "num_shards": num_shards,
+        "leaves": {},
+        "int_key_paths": _int_key_paths(tree),
+    }
+    shards: list[dict[str, np.ndarray]] = [{} for _ in range(num_shards)]
+
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        # bf16 has no numpy dtype — store as uint16 bit pattern
+        if arr.dtype == jnp.bfloat16:
+            stored, dtype_tag = arr.view(np.uint16), "bfloat16"
+        else:
+            stored, dtype_tag = arr, str(arr.dtype)
+        entry = {"shape": list(arr.shape), "dtype": dtype_tag}
+        if arr.size >= shard_threshold and arr.ndim >= 1 and arr.shape[0] >= num_shards:
+            pieces = np.array_split(stored, num_shards, axis=0)
+            entry["split"] = [int(p.shape[0]) for p in pieces]
+            for s, piece in enumerate(pieces):
+                shards[s][key] = piece
+        else:
+            entry["split"] = None
+            shards[step % num_shards if False else 0][key] = stored
+        manifest["leaves"][key] = entry
+
+    for s, payload in enumerate(shards):
+        np.savez(os.path.join(tmp, f"shard_{s:05d}.npz"), **payload)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    # retention
+    steps = sorted(latest_steps(directory))
+    for old in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, f"step_{old:08d}"),
+                      ignore_errors=True)
+    return final
+
+
+def latest_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                out.append(int(name[len("step_"):]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = latest_steps(directory)
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(directory: str, step: int | None = None):
+    """→ (step, tree of np/jnp arrays with logical shapes)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    shard_files = [
+        np.load(os.path.join(path, f"shard_{s:05d}.npz"))
+        for s in range(manifest["num_shards"])
+    ]
+    flat = {}
+    for key, entry in manifest["leaves"].items():
+        if entry["split"] is None:
+            arr = shard_files[0][key]
+        else:
+            arr = np.concatenate(
+                [sf[key] for sf in shard_files if key in sf.files], axis=0
+            )
+        if entry["dtype"] == "bfloat16":
+            arr = jnp.asarray(arr.view(np.uint16)).view(jnp.bfloat16)
+        else:
+            arr = jnp.asarray(arr)
+        flat[key] = arr
+    return step, _unflatten(flat, manifest)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Save-every-N orchestration used by the trainer."""
+
+    directory: str
+    save_every: int = 100
+    keep_last: int = 3
+    num_shards: int = 4
+
+    def maybe_save(self, step: int, tree) -> bool:
+        if step % self.save_every != 0:
+            return False
+        save_checkpoint(
+            self.directory, step, tree,
+            num_shards=self.num_shards, keep_last=self.keep_last,
+        )
+        return True
+
+    def restore_latest(self):
+        """→ (step, tree) or (None, None) when no checkpoint exists."""
+        try:
+            return load_checkpoint(self.directory)
+        except FileNotFoundError:
+            return None, None

@@ -1,0 +1,114 @@
+"""Architecture registry + per-cell input specs (ShapeDtypeStruct stand-ins).
+
+``input_specs(cfg, cell)`` returns abstract inputs for the cell's step
+function — no device allocation, weak-type-correct, shardable:
+  * train/prefill: the batch dict fed to ``loss`` / ``forward``;
+  * decode: (tokens, pos) — the cache is built separately via eval_shape.
+
+Skips (DESIGN.md §5): ``long_500k`` requires sub-quadratic attention state
+and is only defined for the SWA/SSM/hybrid archs; whisper has no long cell.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeCell
+
+ARCHS: tuple[str, ...] = (
+    "gemma3-1b",
+    "h2o-danube-1.8b",
+    "mistral-large-123b",
+    "tinyllama-1.1b",
+    "whisper-medium",
+    "deepseek-v3-671b",
+    "qwen3-moe-30b-a3b",
+    "zamba2-7b",
+    "internvl2-76b",
+    "xlstm-1.3b",
+)
+
+_MODULES = {
+    "gemma3-1b": "gemma3_1b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "mistral-large-123b": "mistral_large_123b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "whisper-medium": "whisper_medium",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "zamba2-7b": "zamba2_7b",
+    "internvl2-76b": "internvl2_76b",
+    "xlstm-1.3b": "xlstm_1_3b",
+}
+
+# archs with sub-quadratic long-context decode (DESIGN.md §5)
+LONG_CONTEXT_OK = frozenset(
+    {"gemma3-1b", "h2o-danube-1.8b", "zamba2-7b", "xlstm-1.3b"}
+)
+
+
+def get_config(arch: str, *, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def cell_supported(cfg: ModelConfig, cell: ShapeCell) -> bool:
+    if cell.name == "long_500k":
+        return cfg.name in LONG_CONTEXT_OK
+    return True
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield every (arch, cell) pair of the 10×4 assignment grid."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for cell in SHAPES.values():
+            if include_skipped or cell_supported(cfg, cell):
+                yield arch, cell
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract batch inputs for train/prefill cells (ShapeDtypeStruct)."""
+    SDS = jax.ShapeDtypeStruct
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.family == "encdec":
+        return {
+            "frames": SDS((B, S, cfg.d_model), cfg.jdtype),
+            "dec_tokens": SDS((B, cfg.dec_seq), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        n_img = min(cfg.vlm_image_tokens, S // 2)
+        return {
+            "tokens": SDS((B, S - n_img), jnp.int32),
+            "patch_embeds": SDS((B, n_img, cfg.d_model), cfg.jdtype),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract (tokens, pos) for a single decode step with seq_len-deep cache."""
+    SDS = jax.ShapeDtypeStruct
+    B = cell.global_batch
+    specs = {
+        "tokens": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        # cross-attend to a natural 30 s encoder source (1500 frames)
+        specs["enc_out"] = SDS((B, 1500, cfg.d_model), cfg.jdtype)
+    return specs
+
+
+def concrete_batch(cfg: ModelConfig, cell: ShapeCell, rng=None) -> dict:
+    """Materialized random batch matching input_specs (smoke tests)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    out = {}
+    for k, spec in input_specs(cfg, cell).items():
+        kr, rng = jax.random.split(rng)
+        if spec.dtype == jnp.int32:
+            out[k] = jax.random.randint(kr, spec.shape, 0, cfg.vocab_size)
+        else:
+            out[k] = jax.random.normal(kr, spec.shape, spec.dtype)
+    return out

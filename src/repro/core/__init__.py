@@ -1,0 +1,14 @@
+"""Core library: the paper's contribution (Thanos) + baselines + driver."""
+from repro.core.api import METHODS, PATTERNS, PruneConfig, prune_layer, reconstruction_error
+from repro.core.hessian import HessianAccumulator, dampen, inv_cholesky_upper
+from repro.core.schedule import PruneReport, get_path, prune_model, set_path
+from repro.core.sparsity import NmCompressed, compression_ratio, pack_nm, unpack_nm
+from repro.core.thanos import PruneResult
+
+__all__ = [
+    "METHODS", "PATTERNS", "PruneConfig", "prune_layer", "reconstruction_error",
+    "HessianAccumulator", "dampen", "inv_cholesky_upper",
+    "PruneReport", "get_path", "prune_model", "set_path",
+    "NmCompressed", "compression_ratio", "pack_nm", "unpack_nm",
+    "PruneResult",
+]

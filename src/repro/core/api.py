@@ -1,0 +1,101 @@
+"""Public pruning API — config dataclass + per-layer dispatch.
+
+The paper's layout convention is followed throughout core/: ``W ∈ R^{c×b}``
+with rows = outputs and columns = inputs (the Hessian lives on the input
+dimension b).  Model kernels in this codebase are stored (in, out); the
+model-level driver in core/schedule.py does the transposes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import magnitude, sparsegpt, wanda
+from repro.core import thanos
+from repro.core.thanos import PruneResult
+
+Array = jax.Array
+
+METHODS = ("thanos", "sparsegpt", "wanda", "magnitude")
+PATTERNS = ("unstructured", "nm", "structured")
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneConfig:
+    """One experiment cell: method × sparsity pattern × hyperparameters."""
+
+    method: str = "thanos"
+    pattern: str = "unstructured"
+    p: float = 0.5              # target sparsity (unstructured/structured)
+    n: int = 2                  # n:m — zeros per group
+    m: int = 4                  # n:m — group size
+    block_size: int = 128       # Thanos B (paper: 128 unstructured, 512 n:m)
+    alpha: float = 0.0          # outlier-row fraction (paper default 0.1 struct)
+    percdamp: float = 0.01
+    row_chunk: int = 0          # Appendix H.2 vertical chunking
+
+    def __post_init__(self):
+        assert self.method in METHODS, self.method
+        assert self.pattern in PATTERNS, self.pattern
+        assert 0.0 <= self.p < 1.0
+        assert 0 < self.n < self.m
+
+    def tag(self) -> str:
+        pat = {"unstructured": f"p{self.p}", "nm": f"{self.n}:{self.m}",
+               "structured": f"struct{self.p}"}[self.pattern]
+        a = f"_a{self.alpha}" if self.alpha else ""
+        return f"{self.method}_{pat}{a}"
+
+
+def prune_layer(w: Array, h: Array | None, cfg: PruneConfig) -> PruneResult:
+    """Prune one linear layer W (c, b) given its Hessian H = 2XXᵀ (b, b)."""
+    if cfg.method != "magnitude" and h is None:
+        raise ValueError(f"{cfg.method} is data-aware: Hessian required")
+
+    if cfg.method == "thanos":
+        if cfg.pattern == "unstructured":
+            return thanos.prune_unstructured(
+                w, h, p=cfg.p, block_size=cfg.block_size,
+                percdamp=cfg.percdamp, row_chunk=cfg.row_chunk, alpha=cfg.alpha,
+            )
+        if cfg.pattern == "nm":
+            return thanos.prune_nm(
+                w, h, n=cfg.n, m=cfg.m, block_size=cfg.block_size,
+                percdamp=cfg.percdamp, row_chunk=cfg.row_chunk, alpha=cfg.alpha,
+            )
+        return thanos.prune_structured(
+            w, h, p=cfg.p, alpha=cfg.alpha, percdamp=cfg.percdamp
+        )
+
+    if cfg.method == "sparsegpt":
+        if cfg.pattern == "unstructured":
+            return sparsegpt.prune_unstructured(
+                w, h, p=cfg.p, mask_blocksize=cfg.block_size,
+                percdamp=cfg.percdamp,
+            )
+        if cfg.pattern == "nm":
+            return sparsegpt.prune_nm(w, h, n=cfg.n, m=cfg.m,
+                                      percdamp=cfg.percdamp)
+        return sparsegpt.prune_structured(w, h, p=cfg.p, percdamp=cfg.percdamp)
+
+    if cfg.method == "wanda":
+        if cfg.pattern == "unstructured":
+            return wanda.prune_unstructured(w, h, p=cfg.p)
+        if cfg.pattern == "nm":
+            return wanda.prune_nm(w, h, n=cfg.n, m=cfg.m)
+        return wanda.prune_structured(w, h, p=cfg.p)
+
+    if cfg.pattern == "unstructured":
+        return magnitude.prune_unstructured(w, p=cfg.p)
+    if cfg.pattern == "nm":
+        return magnitude.prune_nm(w, n=cfg.n, m=cfg.m)
+    return magnitude.prune_structured(w, p=cfg.p)
+
+
+def reconstruction_error(w0: Array, w1: Array, h: Array) -> Array:
+    """‖(Ŵ−W)X‖²_F computed from the Hessian: tr(Δ (H/2) Δᵀ)  (Eq. 1)."""
+    import jax.numpy as jnp
+
+    d = (w1 - w0).astype(jnp.float32)
+    return jnp.einsum("ib,bk,ik->", d, 0.5 * h.astype(jnp.float32), d)

@@ -1,0 +1,55 @@
+"""Magnitude pruning baseline (Han et al. 2015) — paper Alg. 4. Data-free."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.thanos import PruneResult
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("p",))
+def prune_unstructured(w: Array, h: Array | None = None, *, p: float) -> PruneResult:
+    """Layer-global: prune the ⌊pcb⌋ smallest |W_ij| (Alg. 4 line 2)."""
+    c, b = w.shape
+    k = int(p * c * b)
+    mag = jnp.abs(w.astype(jnp.float32)).reshape(-1)
+    idx = jax.lax.top_k(-mag, k)[1]
+    mask = jnp.zeros((c * b,), jnp.float32).at[idx].set(1.0).reshape(c, b)
+    w_out = jnp.where(mask > 0.5, 0.0, w)
+    loss = jnp.sum(jnp.where(mask > 0.5, w.astype(jnp.float32) ** 2, 0.0))
+    return PruneResult(w_out.astype(w.dtype), mask, loss)
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def prune_nm(w: Array, h: Array | None = None, *, n: int, m: int) -> PruneResult:
+    """n:m magnitude: n smallest |W| per m-group."""
+    c, b = w.shape
+    assert b % m == 0
+    mag = jnp.abs(w.astype(jnp.float32)).reshape(c, b // m, m)
+    idx = jax.lax.top_k(-mag, n)[1]                              # (c, g, n)
+    mask = jnp.zeros_like(mag).at[
+        jnp.arange(c)[:, None, None],
+        jnp.arange(b // m)[None, :, None],
+        idx,
+    ].set(1.0).reshape(c, b)
+    w_out = jnp.where(mask > 0.5, 0.0, w)
+    loss = jnp.sum(jnp.where(mask > 0.5, w.astype(jnp.float32) ** 2, 0.0))
+    return PruneResult(w_out.astype(w.dtype), mask, loss)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def prune_structured(w: Array, h: Array | None = None, *, p: float) -> PruneResult:
+    """Column magnitude: drop ⌈pb⌉ smallest-‖·‖₂ columns."""
+    c, b = w.shape
+    s = int(-(-p * b // 1))
+    score = jnp.sum(w.astype(jnp.float32) ** 2, axis=0)
+    q = jax.lax.top_k(-score, s)[1]
+    col_mask = jnp.zeros((b,), jnp.float32).at[q].set(1.0)
+    mask = jnp.broadcast_to(col_mask[None, :], (c, b))
+    w_out = jnp.where(mask > 0.5, 0.0, w)
+    loss = jnp.sum(jnp.where(mask > 0.5, w.astype(jnp.float32) ** 2, 0.0))
+    return PruneResult(w_out.astype(w.dtype), mask, loss)

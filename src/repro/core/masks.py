@@ -1,0 +1,102 @@
+"""Pruning-mask construction: ψ_X global residual mask, n:m masks, φ indices.
+
+Implements the paper's mask machinery:
+
+* ``wanda_metric``   — S^OBD = |W_ij|·‖X_j‖₂   (Eq. 5 / 46; Thanos' metric, §4.2)
+* ``psi_x``          — Eq. 11/49: mask of the r smallest-metric entries over an
+                       arbitrary (sub)matrix — the *global residual mask* that
+                       makes Thanos' sparsity pattern globally adaptive (§4.4).
+* ``nm_mask``        — per-m-group exactly-n mask (Alg. 8 line 10).
+* ``phi_padded``     — Eq. 12/75 + Appendix H.1: indices of nonzeros per row,
+                       padded to a common r_max so batched solves are static-
+                       shaped (padding index 0, padded u entries 0 → padded
+                       Lagrange multipliers are exactly 0, Eq. 79).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def col_norms_from_hessian(h: Array) -> Array:
+    """‖X_j‖₂ per input feature from H = 2XXᵀ: sqrt(diag(H)/2).  (b,)"""
+    return jnp.sqrt(jnp.clip(jnp.diagonal(h), 0.0) * 0.5)
+
+
+def wanda_metric(w: Array, xnorm: Array) -> Array:
+    """S_ij = |W_ij|·‖X_j‖₂ for w (c, b) and xnorm (b,).  Returns (c, b)."""
+    return jnp.abs(w) * xnorm[None, :]
+
+
+def psi_x(w: Array, xnorm: Array, r: Array) -> Array:
+    """Global residual mask ψ_X(W, r): 1 at the r smallest-metric positions.
+
+    ``r`` may be a traced scalar (the residual budget shrinks every block —
+    Alg. 1 line 8), so we rank *all* entries and threshold by rank < r instead
+    of a static top-k.  Ties broken by flat index (stable sort) for exact
+    reproducibility against the NumPy oracle.
+
+    Returns a float mask (c, b): 1.0 = prune.
+    """
+    metric = wanda_metric(w, xnorm).reshape(-1)
+    order = jnp.argsort(metric, stable=True)            # ascending
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
+    mask = (ranks < r).astype(w.dtype)
+    return mask.reshape(w.shape)
+
+
+def nm_mask(w: Array, xnorm: Array, n: int, m: int) -> Array:
+    """n:m mask: within every group of m consecutive columns prune exactly the
+    n smallest-metric weights (Alg. 8 line 10).  b must be divisible by m.
+
+    Returns float mask (c, b): 1.0 = prune.
+    """
+    c, b = w.shape
+    assert b % m == 0, f"n:m needs b % m == 0, got b={b}, m={m}"
+    metric = wanda_metric(w, xnorm).reshape(c, b // m, m)
+    # rank within each group ascending; prune ranks < n
+    order = jnp.argsort(metric, axis=-1, stable=True)
+    ranks = jnp.zeros_like(order).at[
+        jnp.arange(c)[:, None, None],
+        jnp.arange(b // m)[None, :, None],
+        order,
+    ].set(jnp.broadcast_to(jnp.arange(m), (c, b // m, m)))
+    mask = (ranks < n).astype(w.dtype)
+    return mask.reshape(c, b)
+
+
+def phi_padded(mask_block: Array, r_max: int) -> tuple[Array, Array]:
+    """φ(M_i:) per row, padded to r_max  (Eq. 75 + Appendix H.1).
+
+    Args:
+      mask_block: (c, B) 0/1 — the local block mask.
+      r_max: static padding width (≥ max row count; callers use B or n·B/m).
+
+    Returns:
+      q:     (c, r_max) int32 — column indices of pruned weights per row,
+             padded with 0 (the paper pads with index 1 ≡ 0-based 0).
+      valid: (c, r_max) bool — which of the padded slots are real.
+    """
+    c, B = mask_block.shape
+    is_one = mask_block > 0.5
+    # Stable ordering of nonzero positions first: sort key = (not selected, idx)
+    key = jnp.where(is_one, jnp.arange(B)[None, :], B + jnp.arange(B)[None, :])
+    order = jnp.argsort(key, axis=1)[:, :r_max]                  # (c, r_max)
+    counts = jnp.sum(is_one, axis=1)                             # (c,)
+    valid = jnp.arange(r_max)[None, :] < counts[:, None]
+    q = jnp.where(valid, order, 0).astype(jnp.int32)
+    return q, valid
+
+
+def mask_sparsity(mask: Array) -> Array:
+    """p = ‖M‖²_F / (c·b)   (Eq. 18)."""
+    return jnp.sum(mask) / mask.size
+
+
+def check_nm(mask: Array, n: int, m: int) -> Array:
+    """True iff every m-group of every row has exactly n ones."""
+    c, b = mask.shape
+    groups = mask.reshape(c, b // m, m).sum(-1)
+    return jnp.all(groups == n)

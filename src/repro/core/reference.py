@@ -1,0 +1,209 @@
+"""Literal NumPy transcriptions of the paper's algorithms — test oracles.
+
+These follow the pseudo-code *exactly* (shrinking matrices, per-block Hessian
+re-inversion, explicit permutation matrices) with zero JAX and zero cleverness.
+They are O(b⁴/B) and used only on tiny problems in tests to certify the
+static-shape JAX implementations in core/thanos.py.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def _dampen(h: np.ndarray, percdamp: float) -> np.ndarray:
+    h = h.copy()
+    dead = np.diagonal(h) <= 0
+    h[dead, dead] = 1.0
+    lam = percdamp * np.mean(np.diagonal(h))
+    return h + lam * np.eye(h.shape[0])
+
+
+def thanos_unstructured_ref(
+    w: np.ndarray,
+    h: np.ndarray,
+    p: float,
+    block_size: int,
+    percdamp: float = 0.01,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Alg. 1, literally: shrinking W/H, per-block trailing Hessian inverse."""
+    w = np.array(w, dtype=np.float64)
+    c, b = w.shape
+    xnorm = np.sqrt(np.clip(np.diagonal(h), 0, None) * 0.5)  # ‖X_j‖ from 2XXᵀ
+    w[:, np.diagonal(h) <= 0] = 0.0
+    hd = _dampen(np.array(h, dtype=np.float64), percdamp)
+
+    r = int(p * c * b)
+    mask_total = np.zeros((c, b))
+    B = min(block_size, b)
+    for j1 in range(0, b, B):
+        j2 = min(b, j1 + B)
+        # global residual mask ψ_X(W[:, j1:], r)  (Eq. 69)
+        sub = w[:, j1:]
+        metric = np.abs(sub) * xnorm[j1:][None, :]
+        flat_order = np.argsort(metric.ravel(), kind="stable")
+        m_res = np.zeros(metric.size)
+        m_res[flat_order[:r]] = 1.0
+        m_res = m_res.reshape(metric.shape)
+        m_loc = m_res[:, : j2 - j1]                           # Eq. 70
+        r -= int(m_loc.sum())
+        mask_total[:, j1:j2] = m_loc
+
+        hinv_t = np.linalg.inv(hd[j1:, j1:])                  # H ← trailing
+        for i in range(c):                                    # per-row solve
+            q = np.nonzero(m_loc[i])[0]
+            if q.size == 0:
+                continue
+            R = hinv_t[q, :]                                  # Eq. 7
+            Rhat = R[:, q]                                    # Eq. 8
+            u = w[i, j1:][q]                                  # Eq. 9
+            lam = np.linalg.solve(Rhat.T, u)                  # λ̂R̂ = u
+            w[i, j1:] = w[i, j1:] - lam @ R                   # Eq. 10
+            w[i, j1 + q] = 0.0                                # exact zeros
+    return w, mask_total
+
+
+def thanos_nm_ref(
+    w: np.ndarray,
+    h: np.ndarray,
+    n: int,
+    m: int,
+    block_size: int,
+    percdamp: float = 0.01,
+    alpha: float = 0.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Alg. 8, literally (with optional outlier rows)."""
+    w = np.array(w, dtype=np.float64)
+    c, b = w.shape
+    xnorm = np.sqrt(np.clip(np.diagonal(h), 0, None) * 0.5)
+    w[:, np.diagonal(h) <= 0] = 0.0
+    hd = _dampen(np.array(h, dtype=np.float64), percdamp)
+
+    n_out = math.ceil(alpha * c) if alpha > 0 else 0
+    if n_out:
+        hi = np.einsum("ib,bk,ik->i", w, 0.5 * np.array(h, np.float64), w)
+        outlier = np.zeros(c, bool)
+        outlier[np.argsort(-hi, kind="stable")[:n_out]] = True
+    else:
+        outlier = np.zeros(c, bool)
+
+    B = min(block_size, b)
+    mask_total = np.zeros((c, b))
+    for j1 in range(0, b, B):
+        j2 = min(b, j1 + B)
+        blk = w[:, j1:j2]
+        metric = np.abs(blk) * xnorm[j1:j2][None, :]
+        m_loc = np.zeros_like(blk)
+        for g0 in range(0, j2 - j1, m):
+            grp = metric[:, g0 : g0 + m]
+            order = np.argsort(grp, axis=1, kind="stable")
+            for i in range(c):
+                if outlier[i]:
+                    continue
+                m_loc[i, g0 + order[i, :n]] = 1.0
+        mask_total[:, j1:j2] = m_loc
+
+        hinv_t = np.linalg.inv(hd[j1:, j1:])
+        for i in range(c):
+            q = np.nonzero(m_loc[i])[0]
+            if q.size == 0:
+                continue
+            R = hinv_t[q, :]
+            Rhat = R[:, q]
+            u = w[i, j1:][q]
+            lam = np.linalg.solve(Rhat.T, u)
+            w[i, j1:] = w[i, j1:] - lam @ R
+            w[i, j1 + q] = 0.0
+    return w, mask_total
+
+
+def thanos_structured_ref(
+    w: np.ndarray,
+    h: np.ndarray,
+    p: float,
+    alpha: float,
+    percdamp: float = 0.01,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Alg. 2, literally — WITH explicit permutation matrices (App. G.4.4)."""
+    w0 = np.array(w, dtype=np.float64)
+    c, b = w0.shape
+    w0[:, np.diagonal(h) <= 0] = 0.0
+    hd = _dampen(np.array(h, dtype=np.float64), percdamp)
+    hinv = np.linalg.inv(hd)
+
+    s = min(b, math.ceil(p * b / (1.0 - alpha)))
+    n_out = math.ceil(alpha * c) if alpha > 0 else 0
+
+    # rows permutation Q: ascending h_i, outliers (largest) at the end
+    hi = np.einsum("ib,bk,ik->i", w0, 0.5 * np.array(h, np.float64), w0)
+    sig_h = np.argsort(hi, kind="stable")
+    Q = np.zeros((c, c))
+    Q[np.arange(c), sig_h] = 1.0          # (QW)_i = W_{σ(i)}
+    wp = Q @ w0
+
+    # columns permutation P: ascending v_j over non-outlier rows
+    keep_rows = c - n_out
+    xnorm2 = np.clip(np.diagonal(h), 0, None) * 0.5
+    v = np.sum(wp[:keep_rows] ** 2, axis=0) * xnorm2
+    sig_v = np.argsort(v, kind="stable")
+    P = np.zeros((b, b))
+    P[np.arange(b), sig_v] = 1.0
+    wpp = wp @ P.T                        # column j of wpp = column σ_v(j) of wp
+    hinv_p = P @ hinv @ P.T               # Hessian inverse in permuted basis
+
+    # Eq. 13 on the first s (permuted) columns, non-outlier (first keep) rows
+    Rhat = hinv_p[:s, :s]
+    R = hinv_p[:s, :]
+    u = wpp[:keep_rows, :s]
+    delta = -(u @ np.linalg.inv(Rhat)) @ R
+    wpp[:keep_rows] = wpp[:keep_rows] + delta
+    wpp[:keep_rows, :s] = 0.0
+
+    # inverse permutations
+    w_out = Q.T @ (wpp @ P)
+    mask = np.zeros((c, b))
+    pruned_cols = sig_v[:s]
+    nonout_rows = sig_h[:keep_rows]
+    mask[np.ix_(nonout_rows, pruned_cols)] = 1.0
+    return w_out, mask
+
+
+def sparsegpt_ref(
+    w: np.ndarray,
+    h: np.ndarray,
+    p: float,
+    blocksize: int = 128,
+    percdamp: float = 0.01,
+) -> tuple[np.ndarray, np.ndarray]:
+    """SparseGPT Alg. 5 (unstructured), maximally literal.
+
+    Per column q the OBS update uses the inverse of the *current trailing*
+    Hessian ``inv(H[q:, q:])`` — re-inverted from scratch here (O(b⁴), oracle
+    only).  This is exactly what the production algorithm reads off the rows
+    of the Cholesky factor of H^{-1}.
+    """
+    w = np.array(w, dtype=np.float64)
+    c, b = w.shape
+    w[:, np.diagonal(h) <= 0] = 0.0
+    hd = _dampen(np.array(h, dtype=np.float64), percdamp)
+    mask = np.zeros((c, b))
+
+    # d_q = [H_{q:,q:}]^{-1}[0,0] for every column (its value at its own turn)
+    d = np.array([np.linalg.inv(hd[q:, q:])[0, 0] for q in range(b)])
+
+    for j1 in range(0, b, blocksize):
+        j2 = min(b, j1 + blocksize)
+        metric = w[:, j1:j2] ** 2 / d[j1:j2][None, :]
+        k = int(p * c * (j2 - j1))
+        flat = np.argsort(metric.ravel(), kind="stable")
+        m_blk = np.zeros(metric.size)
+        m_blk[flat[:k]] = 1.0
+        m_blk = m_blk.reshape(metric.shape)
+        mask[:, j1:j2] = m_blk
+        for jj in range(j1, j2):
+            hinv_t = np.linalg.inv(hd[jj:, jj:])   # current trailing inverse
+            err = (w[:, jj] * m_blk[:, jj - j1]) / hinv_t[0, 0]
+            w[:, jj:] -= np.outer(err, hinv_t[0, :])
+            w[:, jj] = np.where(m_blk[:, jj - j1] > 0, 0.0, w[:, jj])
+    return w, mask

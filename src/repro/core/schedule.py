@@ -1,0 +1,162 @@
+"""Block-wise model pruning driver — the paper's Alg. 3.
+
+Pruning is sequential over transformer blocks: for each block we (pass 1)
+forward the calibration carries through it *capturing the input of every
+prunable linear layer*, accumulate per-layer Hessians ``2XXᵀ``, prune every
+linear independently, then (pass 2) re-forward through the *pruned* block to
+produce the next block's inputs.  Exactly two forward passes per block.
+
+Models plug in via the ``BlockwiseAdapter`` protocol (implemented once,
+generically, over the model zoo in models/adapter.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import PruneConfig, prune_layer
+from repro.core.hessian import HessianAccumulator
+
+Array = jax.Array
+Path = tuple[Any, ...]
+
+
+# --------------------------------------------------------------------------
+# pytree path utilities (params are nested dicts)
+# --------------------------------------------------------------------------
+def get_path(tree, path: Path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def set_path(tree, path: Path, value):
+    """Functionally replace a leaf; shares all untouched subtrees.
+
+    Integer path elements index the leading axis of a stacked array leaf
+    (e.g. per-expert kernels (E, d_in, d_out) addressed as (..., 'w', e)).
+    """
+    if not path:
+        return value
+    head, rest = path[0], path[1:]
+    if not isinstance(tree, dict):
+        return tree.at[head].set(set_path(tree[head], rest, value))
+    new = dict(tree)
+    new[head] = set_path(tree[head], rest, value)
+    return new
+
+
+# --------------------------------------------------------------------------
+# adapter protocol
+# --------------------------------------------------------------------------
+class BlockwiseAdapter(Protocol):
+    """What a model must expose for Alg.-3 pruning."""
+
+    def num_blocks(self, params) -> int: ...
+
+    def prepare(self, params, batch) -> Any:
+        """Embed a calibration batch; returns the carry entering block 0."""
+
+    def block_apply(
+        self, params, i: int, carry, *, capture: bool
+    ) -> tuple[Any, dict[Path, Array]]:
+        """Forward block i.  With capture=True also return {path: inputs}
+        where inputs are (tokens, b) activations feeding each linear."""
+
+    def block_linear_paths(self, params, i: int) -> list[Path]:
+        """Prunable linear-layer param paths inside block i (kernels stored
+        (in, out))."""
+
+
+@dataclasses.dataclass
+class LayerReport:
+    path: Path
+    sparsity: float
+    obs_loss: float
+    seconds: float
+
+
+@dataclasses.dataclass
+class PruneReport:
+    layers: list[LayerReport]
+    masks: dict[Path, Array]
+    seconds: float
+
+    def mean_sparsity(self) -> float:
+        tot = sum(m.size for m in self.masks.values())
+        ones = sum(float(jnp.sum(m)) for m in self.masks.values())
+        return ones / max(tot, 1)
+
+
+def prune_model(
+    params,
+    adapter: BlockwiseAdapter,
+    batches: Iterable[Any],
+    cfg: PruneConfig,
+    *,
+    keep_masks: bool = True,
+    progress: Callable[[str], None] | None = None,
+) -> tuple[Any, PruneReport]:
+    """Run Alg. 3 over the whole model.  Returns (pruned params, report)."""
+    t_start = time.perf_counter()
+    batches = list(batches)
+    carries = [adapter.prepare(params, b) for b in batches]
+
+    block_fwd = jax.jit(
+        lambda p, c, i: adapter.block_apply(p, i, c, capture=False)[0],
+        static_argnums=(2,),
+    )
+    block_cap = jax.jit(
+        lambda p, c, i: adapter.block_apply(p, i, c, capture=True),
+        static_argnums=(2,),
+    )
+
+    reports: list[LayerReport] = []
+    masks: dict[Path, Array] = {}
+    # Hessian accumulators persist ACROSS blocks: weight-shared layers
+    # (e.g. Zamba2's interleaved shared attention) are invoked at several
+    # block indices and pruned once, at their last site, with statistics
+    # accumulated over every invocation — the correct treatment of weight
+    # sharing under objective Eq. 1.  Entries are dropped once consumed.
+    accs: dict[Path, HessianAccumulator] = {}
+
+    for i in range(adapter.num_blocks(params)):
+        # ---- pass 1: capture inputs, accumulate Hessians -----------------
+        for carry in carries:
+            _, caps = block_cap(params, carry, i)
+            for path, x in caps.items():
+                if path not in accs:
+                    accs[path] = HessianAccumulator.init(x.shape[-1])
+                accs[path] = accs[path].update(x)
+
+        # ---- prune every linear in the block ------------------------------
+        for path in adapter.block_linear_paths(params, i):
+            t0 = time.perf_counter()
+            kernel = get_path(params, path)          # (in, out)
+            h = accs[path].finalize() if path in accs else None
+            res = prune_layer(kernel.T, h, cfg)      # paper layout (out, in)
+            accs.pop(path, None)                     # free the Hessian
+            params = set_path(params, path, res.weights.T.astype(kernel.dtype))
+            if keep_masks:
+                masks[path] = res.mask.T             # (in, out), 1.0 = pruned
+            rep = LayerReport(
+                path=path,
+                sparsity=float(jnp.mean(res.mask)),
+                obs_loss=float(res.loss),
+                seconds=time.perf_counter() - t0,
+            )
+            reports.append(rep)
+            if progress:
+                progress(f"block {i} {'/'.join(map(str, path))}: "
+                         f"sparsity={rep.sparsity:.3f} loss={rep.obs_loss:.3e}")
+
+        # ---- pass 2: propagate through the pruned block -------------------
+        carries = [block_fwd(params, carry, i) for carry in carries]
+
+    return params, PruneReport(
+        layers=reports, masks=masks, seconds=time.perf_counter() - t_start
+    )

@@ -1,0 +1,160 @@
+"""SparseGPT baseline (Frantar & Alistarh 2023) — paper Alg. 5.
+
+Column-sequential OBS pruning.  Uses the same upper Cholesky factor
+``U`` (H^{-1} = UᵀU) as core/thanos.py: at column j's turn, the trailing
+inverse row it needs is ``[H_{j:,j:}]^{-1}[0, :] = U[j,j]·U[j, j:]`` and the
+denominator ``d_j = [H_{j:,j:}]^{-1}[0,0] = U[j,j]²``, so the per-column OBS
+update collapses to ``w[:, j:] -= ((w_j·m_j)/U[j,j]) ⊗ U[j, j:]`` — exactly
+the reference implementation's recipe.
+
+One jit compilation, ``lax.fori_loop`` over columns, full-size operands.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hessian as hmod
+from repro.core.thanos import PruneResult
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("p", "mask_blocksize", "percdamp"))
+def prune_unstructured(
+    w: Array,
+    h: Array,
+    *,
+    p: float,
+    mask_blocksize: int = 128,
+    percdamp: float = 0.01,
+) -> PruneResult:
+    """SparseGPT unstructured: adaptive mask per B_s-column block, p% dense
+    *within each block* (Alg. 5 line 7 — local, unlike Thanos' global ψ_X)."""
+    c, b = w.shape
+    bs = min(mask_blocksize, b)
+    if b % bs != 0:
+        bs = b  # fall back to a single mask block (keeps k static)
+    k = int(p * c * bs)
+
+    hd = hmod.dampen(h, percdamp)
+    u = hmod.inv_cholesky_upper(hd)
+    udiag = jnp.diagonal(u)
+    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
+    cols = jnp.arange(b)
+
+    def refresh(args):
+        w_cur, mask, j = args
+        in_blk = (cols >= j) & (cols < j + bs)
+        metric = (w_cur / udiag[None, :]) ** 2          # w²/d_q, d_q = U_qq²
+        metric = jnp.where(in_blk[None, :], metric, jnp.inf)
+        idx = jax.lax.top_k(-metric.reshape(-1), k)[1]
+        newm = jnp.zeros((c * b,), jnp.float32).at[idx].set(1.0).reshape(c, b)
+        return mask + newm
+
+    def body(j, state):
+        w_cur, mask, loss = state
+        mask = jax.lax.cond(
+            j % bs == 0, refresh, lambda a: a[1], (w_cur, mask, j)
+        )
+        urow = jax.lax.dynamic_slice(u, (j, 0), (1, b))[0]        # U[j, :]
+        ujj = jnp.take(urow, j)
+        mj = jax.lax.dynamic_slice(mask, (0, j), (c, 1))[:, 0]
+        wj = jax.lax.dynamic_slice(w_cur, (0, j), (c, 1))[:, 0]
+        err = wj * mj / ujj
+        loss = loss + 0.5 * jnp.sum(err**2)        # S = ½ w²/d = ½ (w/U_jj)²
+        w_cur = w_cur - jnp.outer(err, jnp.where(cols >= j, urow, 0.0))
+        w_cur = jnp.where((cols == j)[None, :] & (mj > 0.5)[:, None], 0.0, w_cur)
+        return w_cur, mask, loss
+
+    w_out, mask, loss = jax.lax.fori_loop(
+        0, b, body,
+        (w32, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32)),
+    )
+    return PruneResult(w_out.astype(w.dtype), mask, loss)
+
+
+@partial(jax.jit, static_argnames=("n", "m", "percdamp"))
+def prune_nm(
+    w: Array, h: Array, *, n: int, m: int, percdamp: float = 0.01
+) -> PruneResult:
+    """SparseGPT n:m: refresh the mask per m-group, n smallest w²/d per row."""
+    c, b = w.shape
+    assert b % m == 0
+    hd = hmod.dampen(h, percdamp)
+    u = hmod.inv_cholesky_upper(hd)
+    udiag = jnp.diagonal(u)
+    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
+    cols = jnp.arange(b)
+
+    def refresh(args):
+        w_cur, mask, j = args
+        grp_w = jax.lax.dynamic_slice(w_cur, (0, j), (c, m))
+        grp_d = jax.lax.dynamic_slice(udiag, (j,), (m,))
+        metric = (grp_w / grp_d[None, :]) ** 2
+        idx = jax.lax.top_k(-metric, n)[1]                        # (c, n)
+        newm = jnp.zeros((c, m), jnp.float32).at[
+            jnp.arange(c)[:, None], idx
+        ].set(1.0)
+        return jax.lax.dynamic_update_slice(mask, newm, (0, j))
+
+    def body(j, state):
+        w_cur, mask, loss = state
+        mask = jax.lax.cond(
+            j % m == 0, refresh, lambda a: a[1], (w_cur, mask, j)
+        )
+        urow = jax.lax.dynamic_slice(u, (j, 0), (1, b))[0]
+        ujj = jnp.take(urow, j)
+        mj = jax.lax.dynamic_slice(mask, (0, j), (c, 1))[:, 0]
+        wj = jax.lax.dynamic_slice(w_cur, (0, j), (c, 1))[:, 0]
+        err = wj * mj / ujj
+        loss = loss + 0.5 * jnp.sum(err**2)
+        w_cur = w_cur - jnp.outer(err, jnp.where(cols >= j, urow, 0.0))
+        w_cur = jnp.where((cols == j)[None, :] & (mj > 0.5)[:, None], 0.0, w_cur)
+        return w_cur, mask, loss
+
+    w_out, mask, loss = jax.lax.fori_loop(
+        0, b, body,
+        (w32, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32)),
+    )
+    return PruneResult(w_out.astype(w.dtype), mask, loss)
+
+
+@partial(jax.jit, static_argnames=("p", "percdamp"))
+def prune_structured(
+    w: Array, h: Array, *, p: float, percdamp: float = 0.01
+) -> PruneResult:
+    """Structured (column) SparseGPT baseline used in the paper's Tab. 2:
+    remove the ⌈pb⌉ columns with smallest aggregated saliency Σ_k w²/d, each
+    compensated with the sequential single-column OBS rule."""
+    c, b = w.shape
+    s = int(-(-p * b // 1))
+    hd = hmod.dampen(h, percdamp)
+    u = hmod.inv_cholesky_upper(hd)
+    udiag = jnp.diagonal(u)
+    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
+    cols = jnp.arange(b)
+
+    saliency = jnp.sum((w32 / udiag[None, :]) ** 2, axis=0)
+    q = jax.lax.top_k(-saliency, s)[1]
+    col_mask = jnp.zeros((b,), jnp.float32).at[q].set(1.0)
+
+    def body(j, state):
+        w_cur, loss = state
+        urow = jax.lax.dynamic_slice(u, (j, 0), (1, b))[0]
+        ujj = jnp.take(urow, j)
+        mj = jnp.take(col_mask, j)
+        wj = jax.lax.dynamic_slice(w_cur, (0, j), (c, 1))[:, 0]
+        err = wj * mj / ujj
+        loss = loss + 0.5 * jnp.sum(err**2)
+        w_cur = w_cur - jnp.outer(err, jnp.where(cols >= j, urow, 0.0))
+        w_cur = jnp.where((cols == j)[None, :] & (mj > 0.5), 0.0, w_cur)
+        return w_cur, loss
+
+    w_out, loss = jax.lax.fori_loop(
+        0, b, body, (w32, jnp.zeros((), jnp.float32))
+    )
+    mask = jnp.broadcast_to(col_mask[None, :], (c, b))
+    return PruneResult(w_out.astype(w.dtype), mask, loss)

@@ -1,0 +1,89 @@
+"""n:m compressed weight format — the TPU serving artifact of §4.8.
+
+On Ampere GPUs 2:4 sparsity feeds sparse tensor cores.  TPUs have no sparse
+MXU, so the transferable win is **HBM traffic**: we store only the m−n kept
+values per group plus their 4-bit in-group positions.  For 2:4 bf16 that is
+2×2 bytes values + 1 byte packed indices per 8 bytes dense = 62.5% of dense
+bytes (50% + index overhead); for fp32 it is 56.25%.
+
+``NmCompressed`` is the on-disk/LHS format consumed by
+``kernels/nm_spmm.py`` and the serving decode path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class NmCompressed:
+    """Pytree container for n:m-compressed weights.
+
+    (n, m, b) are static aux data, so NmCompressed flows through jit /
+    eval_shape / sharding machinery with only ``values``/``indices`` traced.
+    """
+
+    values: Array    # (c, b // m * (m-n)) kept weights, group-major
+    indices: Array   # (c, b // m * (m-n)) int8 — position within the m-group
+    n: int
+    m: int
+    b: int           # original column count
+
+    @property
+    def kept_per_group(self) -> int:
+        return self.m - self.n
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.n, self.m, self.b)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+
+def pack_nm(w: Array, mask: Array, n: int, m: int) -> NmCompressed:
+    """Compress an n:m-masked matrix (mask 1.0 = pruned).
+
+    Every m-group must contain exactly n ones in ``mask``; validated by
+    tests (core.masks.check_nm) rather than at trace time.
+    """
+    c, b = w.shape
+    keep = m - n
+    g = b // m
+    mk = (mask <= 0.5).reshape(c, g, m)                    # True = kept
+    # stable order: kept positions first within each group
+    key = jnp.where(mk, jnp.arange(m)[None, None, :], m + jnp.arange(m)[None, None, :])
+    order = jnp.argsort(key, axis=-1)[..., :keep]          # (c, g, keep)
+    vals = jnp.take_along_axis(w.reshape(c, g, m), order, axis=-1)
+    return NmCompressed(
+        values=vals.reshape(c, g * keep),
+        indices=order.astype(jnp.int8).reshape(c, g * keep),
+        n=n, m=m, b=b,
+    )
+
+
+def unpack_nm(packed: NmCompressed) -> Array:
+    """Decompress to dense (c, b) — the pure-jnp oracle for the kernel."""
+    c = packed.values.shape[0]
+    keep = packed.kept_per_group
+    g = packed.b // packed.m
+    vals = packed.values.reshape(c, g, keep)
+    idx = packed.indices.reshape(c, g, keep).astype(jnp.int32)
+    dense = jnp.zeros((c, g, packed.m), packed.values.dtype)
+    dense = dense.at[
+        jnp.arange(c)[:, None, None], jnp.arange(g)[None, :, None], idx
+    ].set(vals)
+    return dense.reshape(c, packed.b)
+
+
+def compression_ratio(packed: NmCompressed) -> float:
+    """HBM bytes(compressed) / bytes(dense) — drives the §Roofline memory term."""
+    val_bytes = packed.values.size * packed.values.dtype.itemsize
+    idx_bytes = packed.indices.size  # int8 => 1 byte (4-bit packing would halve)
+    dense_bytes = packed.values.shape[0] * packed.b * packed.values.dtype.itemsize
+    return (val_bytes + idx_bytes) / dense_bytes

@@ -1,0 +1,265 @@
+"""Thanos pruning — Alg. 1 (unstructured), Alg. 8 (n:m), Alg. 2 (structured).
+
+All three share the same static-shape design so each variant jit-compiles
+*once* regardless of block count: instead of physically shrinking W and H per
+block (paper notation ``W_{:,j1:b}``, ``H ← 2(XXᵀ)_{j2:,j2:}``), we keep
+full-size (c, b) arrays and embed the trailing problem with index masks:
+
+* the residual metric is +inf on already-processed columns, so ψ_X never
+  selects them;
+* the trailing inverse Hessian ``[H_{j1:,j1:}]^{-1}`` is materialized as a
+  full-size (b, b) matrix that is exactly the trailing inverse on the
+  active block and zero elsewhere, via the Cholesky identity
+  ``[H_{j:,j:}]^{-1} = U[j:,j:]ᵀ U[j:,j:]`` with ``H^{-1} = UᵀU``
+  (see core/hessian.py) — zeroing rows/cols < j1 of U does precisely this.
+
+Equivalence with the literal shrinking-matrix transcription is asserted in
+tests/test_thanos_unstructured.py against core/reference.py (NumPy oracle).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hessian as hmod
+from repro.core import masks as mmod
+from repro.core import solver as smod
+
+Array = jax.Array
+
+
+class PruneResult(NamedTuple):
+    weights: Array   # (c, b) pruned + OBS-updated weights
+    mask: Array      # (c, b) float 1.0 = pruned
+    loss: Array      # scalar — cumulative OBS loss Σ S_k (paper Eq. 61)
+
+
+def _phi_padded_abs(mask_cb: Array, r_max: int) -> tuple[Array, Array]:
+    """φ over a full-width mask: absolute column indices of ones, padded.
+
+    ``mask_cb`` is (c, b) with ones confined to ≤ r_max columns per row.
+    """
+    c, b = mask_cb.shape
+    is_one = mask_cb > 0.5
+    key = jnp.where(is_one, jnp.arange(b)[None, :], b + jnp.arange(b)[None, :])
+    order = jnp.argsort(key, axis=1)[:, :r_max]
+    counts = jnp.sum(is_one, axis=1)
+    valid = jnp.arange(r_max)[None, :] < counts[:, None]
+    return jnp.where(valid, order, 0).astype(jnp.int32), valid
+
+
+def _embedded_trailing_inverse(u_hinv: Array, j1: Array) -> Array:
+    """(b, b) matrix equal to [H_{j1:,j1:}]^{-1} on [j1:, j1:], 0 elsewhere.
+
+    ``u_hinv`` is the upper factor with H^{-1} = UᵀU; zeroing rows/cols < j1
+    leaves exactly U[j1:, j1:] embedded, and UᵀU of that embeds the trailing
+    inverse (Schur/Cholesky identity, see core/hessian.py).
+    """
+    b = u_hinv.shape[0]
+    keep = jnp.arange(b) >= j1
+    um = jnp.where(keep[:, None] & keep[None, :], u_hinv, 0.0)
+    return um.T @ um
+
+
+@partial(
+    jax.jit,
+    static_argnames=("p", "block_size", "percdamp", "row_chunk", "alpha"),
+)
+def prune_unstructured(
+    w: Array,
+    h: Array,
+    *,
+    p: float,
+    block_size: int = 128,
+    percdamp: float = 0.01,
+    row_chunk: int = 0,
+    alpha: float = 0.0,
+) -> PruneResult:
+    """Thanos Alg. 1 — unstructured pruning to sparsity p with block size B.
+
+    Args:
+      w: (c, b) weights (paper layout: rows = outputs, cols = inputs).
+      h: (b, b) raw Hessian ``2XXᵀ`` (undamped; damping applied here).
+      p: target sparsity in [0, 1).
+      block_size: B — columns updated at once.
+      row_chunk: 0 = solve all rows at once; else chunk (Appendix H.2).
+      alpha: optional outlier-row protection (0 = paper default for
+             unstructured; >0 skips the ⌈αc⌉ highest-energy rows).
+    """
+    c, b = w.shape
+    B = min(block_size, b)
+    nblocks = -(-b // B)
+
+    xnorm = mmod.col_norms_from_hessian(h)
+    hd = hmod.dampen(h, percdamp)
+    u_hinv = hmod.inv_cholesky_upper(hd)
+
+    w32 = w.astype(jnp.float32)
+    # dead calibration features contribute nothing; zero them (ref-impl parity)
+    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w32)
+
+    outlier_rows = _outlier_row_mask(w32, h, alpha)               # (c,) bool
+
+    r0 = jnp.asarray(int(p * c * b), dtype=jnp.int32)             # ⌊pcb⌋
+    cols = jnp.arange(b)
+
+    def body(jb, state):
+        w_cur, r, total_mask, loss = state
+        j1 = jb * B
+        active = cols >= j1
+        in_block = active & (cols < j1 + B)
+
+        # ψ_X over the residual matrix (Alg. 1 line 6) — Eq. 69
+        metric = mmod.wanda_metric(w_cur, xnorm)
+        metric = jnp.where(active[None, :], metric, jnp.inf)
+        metric = jnp.where(outlier_rows[:, None], jnp.inf, metric)
+        flat = metric.reshape(-1)
+        order = jnp.argsort(flat, stable=True)
+        ranks = jnp.zeros_like(order).at[order].set(jnp.arange(flat.shape[0]))
+        m_res = (ranks < r).reshape(c, b)
+        m_blk = (m_res & in_block[None, :]).astype(jnp.float32)   # Eq. 70
+        r = r - jnp.sum(m_blk).astype(jnp.int32)                  # line 8
+
+        q_abs, valid = _phi_padded_abs(m_blk, B)                  # line 11
+        hinv = _embedded_trailing_inverse(u_hinv, j1)             # line 17
+        loss = loss + jnp.sum(smod.obs_loss(hinv, w_cur, q_abs, valid))
+        w_cur = smod.prune_rows_block(
+            hinv, w_cur, q_abs, valid, row_chunk=row_chunk
+        )                                                          # line 15
+        return w_cur, r, total_mask + m_blk, loss
+
+    w_out, _, mask, loss = jax.lax.fori_loop(
+        0,
+        nblocks,
+        body,
+        (w32, r0, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32)),
+    )
+    return PruneResult(w_out.astype(w.dtype), mask, loss)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n", "m", "block_size", "percdamp", "row_chunk", "alpha"),
+)
+def prune_nm(
+    w: Array,
+    h: Array,
+    *,
+    n: int,
+    m: int,
+    block_size: int = 512,
+    percdamp: float = 0.01,
+    row_chunk: int = 0,
+    alpha: float = 0.0,
+) -> PruneResult:
+    """Thanos Alg. 8 — semi-structured n:m (n zeros per m consecutive weights).
+
+    With α > 0, the ⌈αc⌉ highest-energy rows are left dense (paper §5.1: this
+    lowers realized sparsity, e.g. 2:4 α=0.1 → p=0.45).
+    """
+    c, b = w.shape
+    B = min(block_size, b)
+    assert B % m == 0 and b % B == 0, f"need m | B | b, got {m=} {B=} {b=}"
+    nblocks = b // B
+    r_max = (B // m) * n
+
+    xnorm = mmod.col_norms_from_hessian(h)
+    hd = hmod.dampen(h, percdamp)
+    u_hinv = hmod.inv_cholesky_upper(hd)
+    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
+    outlier_rows = _outlier_row_mask(w32, h, alpha)
+
+    def body(jb, state):
+        w_cur, total_mask, loss = state
+        j1 = jb * B
+        blk = jax.lax.dynamic_slice(w_cur, (0, j1), (c, B))
+        xn_blk = jax.lax.dynamic_slice(xnorm, (j1,), (B,))
+        m_blk_local = mmod.nm_mask(blk, xn_blk, n, m)             # Alg.8 line 10
+        m_blk_local = jnp.where(outlier_rows[:, None], 0.0, m_blk_local)
+        # embed block mask at absolute position
+        m_blk = jnp.zeros((c, b), jnp.float32)
+        m_blk = jax.lax.dynamic_update_slice(m_blk, m_blk_local, (0, j1))
+
+        q_abs, valid = _phi_padded_abs(m_blk, r_max)
+        hinv = _embedded_trailing_inverse(u_hinv, j1)
+        loss = loss + jnp.sum(smod.obs_loss(hinv, w_cur, q_abs, valid))
+        w_cur = smod.prune_rows_block(
+            hinv, w_cur, q_abs, valid, row_chunk=row_chunk
+        )
+        return w_cur, total_mask + m_blk, loss
+
+    w_out, mask, loss = jax.lax.fori_loop(
+        0, nblocks, body,
+        (w32, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32)),
+    )
+    return PruneResult(w_out.astype(w.dtype), mask, loss)
+
+
+def _outlier_row_mask(w: Array, h: Array, alpha: float) -> Array:
+    """(c,) bool — the ⌈αc⌉ rows with largest h_i = ‖W_i X‖² (Eq. 14).
+
+    h_i = W_i (XXᵀ) W_iᵀ = W_i (H/2) W_iᵀ.
+    """
+    c = w.shape[0]
+    n_out = int(-(-alpha * c // 1)) if alpha > 0 else 0   # ⌈αc⌉
+    if n_out == 0:
+        return jnp.zeros((c,), bool)
+    hi = jnp.einsum("ib,bk,ik->i", w, 0.5 * h, w)
+    thresh = jax.lax.top_k(hi, n_out)[0][-1]
+    # break ties by index: take exactly n_out rows
+    order = jnp.argsort(-hi, stable=True)
+    mask = jnp.zeros((c,), bool).at[order[:n_out]].set(True)
+    del thresh
+    return mask
+
+
+@partial(jax.jit, static_argnames=("p", "alpha", "percdamp"))
+def prune_structured(
+    w: Array,
+    h: Array,
+    *,
+    p: float,
+    alpha: float = 0.1,
+    percdamp: float = 0.01,
+) -> PruneResult:
+    """Thanos Alg. 2 — structured column pruning with outlier-row protection.
+
+    Removes s = ⌈pb/(1−α)⌉ whole columns from the c−⌈αc⌉ non-outlier rows in
+    a *single* multi-column OBS update (Eq. 13).  Implemented permutation-free
+    with gathers (the paper's P/Q permutations exist only to make slices
+    contiguous for in-place kernels — mathematically identical; equivalence is
+    asserted against the literal permutation transcription in tests).
+    """
+    c, b = w.shape
+    s = int(-(-p * b // (1.0 - alpha)))                      # ⌈pb/(1−α)⌉
+    s = min(s, b)
+
+    xnorm2 = jnp.clip(jnp.diagonal(h), 0.0) * 0.5            # ‖X_j‖²
+    hd = hmod.dampen(h, percdamp)
+    u_hinv = hmod.inv_cholesky_upper(hd)
+    hinv = u_hinv.T @ u_hinv
+
+    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
+    outlier = _outlier_row_mask(w32, h, alpha)               # (c,) bool
+
+    # v_j over non-outlier rows (Eq. 15): ‖W_{nonout, j}‖² · ‖X_j‖²
+    w_no = jnp.where(outlier[:, None], 0.0, w32)
+    v = jnp.sum(w_no * w_no, axis=0) * xnorm2
+    q = jnp.sort(jax.lax.top_k(-v, s)[1])                    # s smallest, sorted
+
+    rhat = hinv[q[:, None], q[None, :]]                      # (s, s)
+    r_rows = hinv[q, :]                                      # (s, b)
+    u = w_no[:, q]                                           # (c, s)
+    lam = jnp.linalg.solve(rhat.T, u.T).T                    # λ̂ = u R̂⁻¹
+    delta = -(lam @ r_rows)                                  # Eq. 13
+    w_new = jnp.where(outlier[:, None], w32, w32 + delta)
+
+    col_pruned = jnp.zeros((b,), jnp.float32).at[q].set(1.0)
+    mask = jnp.where(outlier[:, None], 0.0, col_pruned[None, :])
+    w_new = jnp.where(mask > 0.5, 0.0, w_new)
+
+    loss = 0.5 * jnp.sum(lam * u)                            # Σ_k S_k (Eq. 61)
+    return PruneResult(w_new.astype(w.dtype), mask, loss)

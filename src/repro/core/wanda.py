@@ -1,0 +1,62 @@
+"""Wanda baseline (Sun et al. 2023) — paper Alg. 6.
+
+Metric |W_ij|·‖X_j‖₂ (Eq. 46), per-output-row comparison group, *no* weight
+update.  The paper proves (App. G.3) this is the optimal single-weight
+removal when surviving weights are frozen — which is exactly why Thanos
+reuses the metric for mask selection and adds the OBS update on top.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as mmod
+from repro.core.thanos import PruneResult
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("p",))
+def prune_unstructured(w: Array, h: Array, *, p: float) -> PruneResult:
+    """Per row, prune the ⌊pb⌋ smallest-metric weights (row-local sparsity)."""
+    c, b = w.shape
+    k = int(p * b)
+    xnorm = mmod.col_norms_from_hessian(h)
+    metric = mmod.wanda_metric(w.astype(jnp.float32), xnorm)
+    idx = jax.lax.top_k(-metric, k)[1]                            # (c, k)
+    mask = jnp.zeros((c, b), jnp.float32).at[
+        jnp.arange(c)[:, None], idx
+    ].set(1.0)
+    w_out = jnp.where(mask > 0.5, 0.0, w)
+    loss = jnp.sum(jnp.where(mask > 0.5, metric, 0.0) ** 2)       # Σ S^OBD
+    return PruneResult(w_out.astype(w.dtype), mask, loss)
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def prune_nm(w: Array, h: Array, *, n: int, m: int) -> PruneResult:
+    """n:m Wanda: n smallest-metric weights per m-group, no update."""
+    xnorm = mmod.col_norms_from_hessian(h)
+    mask = mmod.nm_mask(w.astype(jnp.float32), xnorm, n, m)
+    w_out = jnp.where(mask > 0.5, 0.0, w)
+    metric = mmod.wanda_metric(w.astype(jnp.float32), xnorm)
+    loss = jnp.sum(jnp.where(mask > 0.5, metric, 0.0) ** 2)
+    return PruneResult(w_out.astype(w.dtype), mask, loss)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def prune_structured(w: Array, h: Array, *, p: float) -> PruneResult:
+    """Structured Wanda (paper Tab. 2 baseline): drop the ⌈pb⌉ columns with
+    the smallest aggregated metric Σ_i (|W_ij|·‖X_j‖)², no update."""
+    c, b = w.shape
+    s = int(-(-p * b // 1))
+    xnorm = mmod.col_norms_from_hessian(h)
+    metric = mmod.wanda_metric(w.astype(jnp.float32), xnorm)
+    col_score = jnp.sum(metric**2, axis=0)
+    q = jax.lax.top_k(-col_score, s)[1]
+    col_mask = jnp.zeros((b,), jnp.float32).at[q].set(1.0)
+    mask = jnp.broadcast_to(col_mask[None, :], (c, b))
+    w_out = jnp.where(mask > 0.5, 0.0, w)
+    loss = jnp.sum(jnp.where(mask > 0.5, metric, 0.0) ** 2)
+    return PruneResult(w_out.astype(w.dtype), mask, loss)

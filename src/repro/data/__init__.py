@@ -1,0 +1,15 @@
+"""Data pipeline: synthetic calibration + training streams (offline stand-in
+for C4/WikiText-2, DESIGN.md §7.4)."""
+from repro.data.pipeline import (
+    CalibrationStream,
+    SyntheticCorpus,
+    TrainStream,
+    calibration_batches,
+)
+
+__all__ = [
+    "CalibrationStream",
+    "SyntheticCorpus",
+    "TrainStream",
+    "calibration_batches",
+]

@@ -1,0 +1,192 @@
+"""Deterministic synthetic token pipeline — the offline stand-in for C4.
+
+The paper calibrates on 128 C4 sequences and evaluates WikiText-2 perplexity.
+Neither corpus is available offline, so we synthesize a stream with the two
+statistics that matter for data-aware pruning (DESIGN.md §7.4):
+
+* **Zipfian unigram marginals** — activation norms ‖X_j‖ get the heavy-tailed
+  feature-energy profile real text induces (this is what separates Wanda/
+  SparseGPT/Thanos from magnitude pruning);
+* **induced bigram structure** — a low-rank Markov chain over the vocabulary
+  so next-token loss is learnable and *degrades measurably* under pruning
+  (a pure iid stream would make every method look identical).
+
+Everything is counter-based (threefry via ``jax.random.fold_in``), so any
+(host, step) pair regenerates its batch exactly — restart-safe with **zero**
+data-state in checkpoints, and shardable across hosts without communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticCorpus:
+    """A deterministic 'corpus': Zipf unigrams + rank-k bigram mixing."""
+
+    vocab_size: int
+    seed: int = 0
+    zipf_a: float = 1.1          # Zipf exponent for unigram marginals
+    mix_rank: int = 8            # rank of the bigram transition structure
+    mix_weight: float = 0.55     # P(next ~ bigram) vs P(next ~ unigram)
+
+    def _unigram_logits(self) -> np.ndarray:
+        ranks = np.arange(1, self.vocab_size + 1, dtype=np.float64)
+        probs = ranks ** (-self.zipf_a)
+        return np.log(probs / probs.sum()).astype(np.float32)
+
+    def sample(self, key: Array, batch: int, seq_len: int) -> Array:
+        """(batch, seq_len) int32 tokens.  Pure function of ``key``."""
+        uni = jnp.asarray(self._unigram_logits())
+        k_embed, k_first, k_scan = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), 7), 3
+        )
+        # low-rank bigram: next-token logits = E[prev] @ D^T, rows fixed by seed
+        e = jax.random.normal(k_embed, (self.vocab_size, self.mix_rank)) * 1.5
+        d = jax.random.permutation(k_embed, e, axis=0)  # decoder ≠ encoder
+
+        first = jax.random.categorical(
+            jax.random.fold_in(k_first, key[-1]), uni, shape=(batch,)
+        )
+
+        def step(prev, k):
+            big = e[prev] @ d.T                              # (batch, V)
+            logits = (
+                jnp.log(self.mix_weight) + jax.nn.log_softmax(big, -1)
+            )
+            logits = jnp.logaddexp(
+                logits, jnp.log1p(-self.mix_weight) + uni[None, :]
+            )
+            nxt = jax.random.categorical(k, logits, axis=-1)
+            return nxt, nxt
+
+        keys = jax.random.split(key, seq_len - 1)
+        _, rest = jax.lax.scan(step, first, keys)
+        return jnp.concatenate([first[None], rest], 0).T.astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class TrainStream:
+    """Infinite deterministic training stream.
+
+    ``batch_at(step)`` is a pure function of (seed, host_id, step): restarts
+    resume mid-epoch with no iterator state, and each host generates only its
+    own shard (host-sliced batch of ``global_batch // num_hosts``).
+    """
+
+    corpus: SyntheticCorpus
+    global_batch: int
+    seq_len: int
+    num_hosts: int = 1
+    host_id: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.global_batch % self.num_hosts == 0
+        self._sample = jax.jit(
+            lambda key: self.corpus.sample(
+                key, self.global_batch // self.num_hosts, self.seq_len
+            )
+        )
+
+    def batch_at(self, step: int) -> dict[str, Array]:
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), self.host_id),
+            step,
+        )
+        tokens = self._sample(key)
+        return {"tokens": tokens}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass
+class CalibrationStream:
+    """The paper's calibration set: ``num_samples`` fixed sequences (§5.1)."""
+
+    corpus: SyntheticCorpus
+    num_samples: int = 128
+    seq_len: int = 2048
+    batch: int = 8
+    seed: int = 1234
+
+    def batches(self) -> list[dict[str, Array]]:
+        assert self.num_samples % self.batch == 0
+        sample = jax.jit(
+            lambda key: self.corpus.sample(key, self.batch, self.seq_len)
+        )
+        out = []
+        for i in range(self.num_samples // self.batch):
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), i)
+            out.append({"tokens": sample(key)})
+        return out
+
+
+def calibration_batches(
+    cfg, *, num_samples: int = 32, seq_len: int = 256, batch: int = 8,
+    seed: int = 1234, corpus_seed: int = 0,
+) -> list[dict[str, Array]]:
+    """Model-aware calibration batches (fills modality stubs per family).
+
+    ``corpus_seed`` fixes the *language* (Zipf marginals + bigram
+    structure) and must match the training corpus — calibration data from
+    a different language makes data-aware pruning statistics meaningless.
+    ``seed`` only decorrelates the sampled sequences.
+    """
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=corpus_seed)
+    stream = CalibrationStream(
+        corpus, num_samples=num_samples, seq_len=seq_len, batch=batch,
+        seed=seed,
+    )
+    batches = stream.batches()
+    if cfg.family == "encdec":
+        key = jax.random.PRNGKey(seed + 1)
+        out = []
+        for i, b in enumerate(batches):
+            kf = jax.random.fold_in(key, i)
+            out.append({
+                "frames": jax.random.normal(
+                    kf, (batch, seq_len, cfg.d_model), cfg.jdtype
+                ),
+                "dec_tokens": b["tokens"][:, : min(cfg.dec_seq, seq_len)],
+            })
+        return out
+    if cfg.family == "vlm":
+        key = jax.random.PRNGKey(seed + 2)
+        n_img = min(cfg.vlm_image_tokens, seq_len // 2)
+        out = []
+        for i, b in enumerate(batches):
+            kf = jax.random.fold_in(key, i)
+            out.append({
+                "tokens": b["tokens"][:, : seq_len - n_img],
+                "patch_embeds": jax.random.normal(
+                    kf, (batch, n_img, cfg.d_model), cfg.jdtype
+                ),
+            })
+        return out
+    return batches
+
+
+def heldout_loss(model, params, cfg, *, num_batches: int = 4,
+                 seq_len: int = 256, batch: int = 8, seed: int = 9999,
+                 corpus_seed: int = 0):
+    """Mean next-token CE on a held-out synthetic slice (perplexity proxy).
+
+    Same language as training (corpus_seed), fresh sequences (seed)."""
+    batches = calibration_batches(
+        cfg, num_samples=num_batches * batch, seq_len=seq_len, batch=batch,
+        seed=seed, corpus_seed=corpus_seed,
+    )
+    loss_fn = jax.jit(model.loss)
+    losses = [float(loss_fn(params, b)) for b in batches]
+    return float(np.mean(losses))

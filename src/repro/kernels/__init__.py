@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+    nm_spmm.py        n:m compressed-weight matmul (decode HBM-traffic win)
+    hessian_accum.py  tiled H = 2·XᵀX calibration accumulation
+    ops.py            jit'd public wrappers (interpret-mode on CPU)
+    ref.py            pure-jnp oracles
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: tiled Hessian accumulation H = 2·XᵀX (calibration).
+
+The pruning pipeline's hot loop over calibration data is the rank-k update
+``H += Xᵀ X`` per linear layer (paper Eq. 34/35; X token-major (t, b)).
+At b = 28 672 (mistral-large d_ff) H is 3.3 GB fp32 — too big for VMEM — so
+we tile the (b, b) output over a 2-D grid and stream token tiles through
+each output tile, accumulating in a fp32 VMEM scratch regardless of the
+activation dtype (bf16 inputs, fp32 Hessian: the numerics the reference
+implementations use).
+
+Grid: (b_i tiles, b_j tiles, token tiles); output written on the last token
+step.  Symmetry is *not* exploited (both halves computed) to keep the store
+pattern trivially coalesced; exploiting it would halve compute of an
+already bandwidth-bound kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _hess_kernel(xi_ref, xj_ref, o_ref, acc_ref, *, nsteps: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xi = xi_ref[...].astype(jnp.float32)      # (tt, bi)
+    xj = xj_ref[...].astype(jnp.float32)      # (tt, bj)
+    acc_ref[...] += jax.lax.dot_general(
+        xi, xj, (((0,), (0,)), ((), ())),     # xiᵀ @ xj
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(t == nsteps - 1)
+    def _flush():
+        o_ref[...] = 2.0 * acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_t", "interpret")
+)
+def hessian_xtx(
+    x: Array,                 # (tokens, b) activations, any float dtype
+    *,
+    block_b: int = 256,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """H = 2·XᵀX, fp32 (b, b)."""
+    tokens, b = x.shape
+    bb = min(block_b, b)
+    bt = min(block_t, tokens)
+    assert b % bb == 0 and tokens % bt == 0
+    nsteps = tokens // bt
+
+    grid = (b // bb, b // bb, nsteps)
+    kernel = functools.partial(_hess_kernel, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bb), lambda i, j, t: (t, i)),
+            pl.BlockSpec((bt, bb), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bb), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, b), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bb, bb), jnp.float32)],
+        interpret=interpret,
+    )(x, x)

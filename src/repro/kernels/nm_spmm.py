@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: n:m compressed-weight matmul (decode hot path).
+
+Paper §4.8 accelerates 2:4 sparsity with Ampere sparse tensor cores.  TPUs
+have no sparse MXU, so the transferable win is **HBM traffic** (DESIGN.md
+§3): decode is memory-bound (arithmetic intensity ≈ batch), and the weight
+stream dominates bytes.  This kernel streams the *compressed* representation
+HBM→VMEM — ``keep/m`` of the dense values plus small int8 in-group indices —
+expands each tile to dense **inside VMEM** with a one-hot contraction (VPU),
+and feeds the dense tile to the MXU.  Compute term unchanged; memory term
+scales by ≈ (keep/m + index overhead).
+
+Layout (group-major, g = b/m groups, keep = m−n kept values per group):
+    values  (c, g·keep)  same dtype as x
+    indices (c, g·keep)  int8, in-group position ∈ [0, m)
+
+Grid: (x_tiles, c_tiles, b_tiles) — b is the contraction dim, accumulated in
+a fp32 VMEM scratch; the output tile is written once on the last b step
+(standard Pallas accumulation pattern).  Tile defaults are MXU-aligned
+(lane = 128 multiples).
+
+Validated in interpret mode against ref.nm_matmul_ref over shape/dtype
+sweeps (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _nm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, m: int, keep: int,
+               nsteps: int):
+    """One (B_tile × c_tile) output tile; contraction step j over b tiles."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    vals = val_ref[...]                                   # (ct, gt·keep)
+    idx = idx_ref[...].astype(jnp.int32)
+    ct = vals.shape[0]
+    gt = vals.shape[1] // keep
+
+    # expand compressed tile → dense (ct, gt·m) in VMEM: one-hot contraction
+    vals3 = vals.reshape(ct, gt, keep).astype(jnp.float32)
+    idx3 = idx.reshape(ct, gt, keep)
+    onehot = (idx3[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, (ct, gt, keep, m), 3)).astype(jnp.float32)
+    dense = jnp.sum(vals3[..., None] * onehot, axis=2)    # (ct, gt, m)
+    dense = dense.reshape(ct, gt * m)                     # (ct, bt)
+
+    x = x_ref[...].astype(jnp.float32)                    # (Bt, bt)
+    acc_ref[...] += jax.lax.dot_general(
+        x, dense, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(j == nsteps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "m", "b", "block_b", "block_c", "block_x",
+                     "interpret"),
+)
+def nm_matmul(
+    x: Array,          # (B, b) activations
+    values: Array,     # (c, g·keep)
+    indices: Array,    # (c, g·keep) int8
+    *,
+    n: int,
+    m: int,
+    b: int,
+    block_b: int = 512,
+    block_c: int = 256,
+    block_x: int = 0,
+    interpret: bool = False,
+) -> Array:
+    """y = x @ Wᵀ with W the n:m compressed (c, b) weight matrix."""
+    B = x.shape[0]
+    c = values.shape[0]
+    keep = m - n
+    assert b % m == 0 and values.shape[1] == (b // m) * keep, \
+        f"bad compressed layout: {values.shape} for b={b} {n}:{m}"
+
+    bb = min(block_b, b)
+    bc = min(block_c, c)
+    bx = B if block_x == 0 else min(block_x, B)
+    assert b % bb == 0 and c % bc == 0 and B % bx == 0
+    assert bb % m == 0
+    gb = (bb // m) * keep        # compressed width of one b tile
+    nsteps = b // bb
+
+    grid = (B // bx, c // bc, nsteps)
+    kernel = functools.partial(_nm_kernel, m=m, keep=keep, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bx, bb), lambda i, k, j: (i, j)),
+            pl.BlockSpec((bc, gb), lambda i, k, j: (k, j)),
+            pl.BlockSpec((bc, gb), lambda i, k, j: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bx, bc), lambda i, k, j: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((B, c), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bx, bc), jnp.float32)],
+        interpret=interpret,
+    )(x, values, indices)

@@ -1,0 +1,46 @@
+"""Public jit'd wrappers over the Pallas kernels, with backend dispatch.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs as traced Python, bit-faithful to the ref oracles.  On TPU the
+same calls lower through Mosaic with the declared BlockSpecs.  Callers can
+also force the pure-jnp reference (``impl='ref'``) which XLA fuses well on
+any backend — that path is what the serving engine uses by default.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.sparsity import NmCompressed
+from repro.kernels import nm_spmm, hessian_accum, ref
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def nm_matmul(x: Array, packed: NmCompressed, *, impl: str = "pallas",
+              **tiles) -> Array:
+    """y = x @ Wᵀ for n:m compressed W (c, b); x (..., b) → y (..., c)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if impl == "ref":
+        y = ref.nm_matmul_ref(
+            x2, packed.values, packed.indices, packed.n, packed.m, packed.b
+        )
+    else:
+        y = nm_spmm.nm_matmul(
+            x2, packed.values, packed.indices,
+            n=packed.n, m=packed.m, b=packed.b,
+            interpret=_interpret(), **tiles,
+        )
+    return y.reshape(*lead, -1)
+
+
+def hessian_xtx(x: Array, *, impl: str = "pallas", **tiles) -> Array:
+    """H = 2·XᵀX for token-major activations x (..., b)."""
+    x2 = x.reshape(-1, x.shape[-1])
+    if impl == "ref":
+        return ref.hessian_ref(x2)
+    return hessian_accum.hessian_xtx(x2, interpret=_interpret(), **tiles)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def nm_expand(values: Array, indices: Array, n: int, m: int, b: int) -> Array:
+    """Dense (c, b) from group-major n:m storage — one-hot formulation.
+
+    values/indices: (c, g·keep) with g = b/m groups of ``keep = m − n`` kept
+    weights each; indices are in-group positions (0..m−1).
+
+    dense[c, g, j] = Σ_k values[c, g, k] · 1[indices[c, g, k] == j]
+    — exactly what the Pallas kernel computes per VMEM tile.
+    """
+    keep = m - n
+    c = values.shape[0]
+    g = b // m
+    vals = values.reshape(c, g, keep).astype(jnp.float32)
+    idx = indices.reshape(c, g, keep).astype(jnp.int32)
+    onehot = idx[..., None] == jnp.arange(m)[None, None, None, :]
+    dense = jnp.sum(vals[..., None] * onehot, axis=2)         # (c, g, m)
+    return dense.reshape(c, b).astype(values.dtype)
+
+
+def nm_matmul_ref(x: Array, values: Array, indices: Array, n: int, m: int,
+                  b: int) -> Array:
+    """y = x @ denseᵀ for n:m compressed W (c, b); x (B, b) → y (B, c)."""
+    w = nm_expand(values, indices, n, m, b)
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32).T).astype(x.dtype)
+
+
+def hessian_ref(x: Array) -> Array:
+    """H = 2·XᵀX for token-major X (tokens, b) — fp32 accumulation."""
+    x32 = x.astype(jnp.float32)
+    return 2.0 * (x32.T @ x32)

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line above executes before any jax import, giving this process
+512 placeholder CPU devices so ``jax.make_mesh`` can build the production
+meshes.  Nothing here allocates device memory: inputs are ShapeDtypeStructs
+and we stop at ``.compile()``.
+
+Per cell it records (experiments/dryrun/*.json):
+  * compile wall time, HLO op counts;
+  * ``compiled.memory_analysis()``   — per-device bytes (proves fit / flags
+    over-budget cells);
+  * ``compiled.cost_analysis()``     — per-device FLOPs + bytes accessed;
+  * collective bytes parsed from the post-SPMD HLO — all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute, summed
+    over output-shape bytes (all-reduce counted 2× — ring = RS+AG);
+  * the three roofline terms (§Roofline) against v5e peaks.
+
+Conventions: cost_analysis runs on the partitioned module = *per-device*
+numbers; they are multiplied back by chip count where the roofline formula
+expects cluster totals.
+"""
+import argparse
+import json
+import re
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_builder import build_model
+
+# --- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (roofline convention: 1 link)
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(?P<shape>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+)
+SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d+|pred)\[(?P<dims>[\d,]*)\]")
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(shape_str):
+        nb = DTYPE_BYTES.get(m.group("dt"))
+        if nb is None:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _parse_computations(hlo_text: str):
+    """→ {name: {'collectives': {op: bytes}, 'counts': .., 'whiles': [(cond,
+    body)]}}, entry_name.  Post-SPMD HLO: collectives never live inside
+    fusions, so computation-level accounting + while expansion is exact."""
+    comps: dict[str, dict] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and "->" in line and "{" in line:
+            m = COMP_HEADER_RE.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = {"collectives": {}, "counts": {}, "whiles": [],
+                              "consts": []}
+                if stripped.startswith("ENTRY") or line.startswith("ENTRY"):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        wm = WHILE_RE.search(line)
+        if wm:
+            comps[cur]["whiles"].append((wm.group(1), wm.group(2)))
+        for cm in CONST_RE.finditer(line):
+            comps[cur]["consts"].append(int(cm.group(1)))
+        m = COLLECTIVE_RE.search(line)
+        if m is not None and "-done(" not in line:
+            op = m.group("op")
+            b = shape_bytes(m.group("shape"))
+            if op == "all-reduce":
+                b *= 2
+            comps[cur]["collectives"][op] = (
+                comps[cur]["collectives"].get(op, 0) + b)
+            comps[cur]["counts"][op] = comps[cur]["counts"].get(op, 0) + 1
+    return comps, entry
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Collective byte totals with while-loop trip-count expansion.
+
+    XLA lists a scan body once; we multiply body collectives by the trip
+    count recovered from the condition computation's integer constant (all
+    loops in this codebase are static-bound scans/fori).  Convention:
+    output-shape bytes; all-reduce ×2 (ring = reduce-scatter + all-gather).
+    """
+    comps, entry = _parse_computations(hlo_text)
+    if entry is None:
+        return {"bytes": {}, "counts": {}, "total": 0.0}
+
+    memo: dict[str, tuple[dict, dict]] = {}
+
+    def total(name: str) -> tuple[dict, dict]:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return {}, {}
+        memo[name] = ({}, {})  # cycle guard
+        by = dict(comp["collectives"])
+        ct = dict(comp["counts"])
+        for cond, body in comp["whiles"]:
+            trip = max(comps.get(cond, {}).get("consts", [1]) or [1])
+            bb, bc = total(body)
+            for k, v in bb.items():
+                by[k] = by.get(k, 0) + trip * v
+            for k, v in bc.items():
+                ct[k] = ct.get(k, 0) + trip * v
+        memo[name] = (by, ct)
+        return by, ct
+
+    by, ct = total(entry)
+    return {"bytes": by, "counts": ct, "total": float(sum(by.values()))}
+
+
+def model_flops(cfg, params_abstract, cell) -> dict:
+    """MODEL_FLOPS yardstick: 6·N_active·D train / 2·N_active·D forward."""
+    n_total = n_active = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_abstract)[0]
+    for keypath, leaf in flat:
+        path = [str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath]
+        size = int(np.prod(leaf.shape))
+        name = path[-1]
+        if name == "table":       # embedding: count once (tied head matmul)
+            n_total += size
+            n_active += size
+            continue
+        if name != "w" or len(leaf.shape) < 2:
+            continue
+        n_total += size
+        if len(leaf.shape) == 3 and cfg.num_experts:   # stacked experts
+            n_active += size * cfg.num_experts_per_tok / cfg.num_experts
+        else:
+            n_active += size
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        flops = 6.0 * n_active * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        flops = 2.0 * n_active * cell.global_batch
+    return {"n_total": float(n_total), "n_active": float(n_active),
+            "model_flops": float(flops)}
+
+
+def mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def run_cell(arch: str, cell, mesh, mesh_name: str, chips: int) -> dict:
+    import functools
+
+    from repro.launch import costmodel as CM
+
+    cfg = registry.get_config(arch)
+    model = build_model(cfg)
+    t0 = time.perf_counter()
+    jitted, args = S.make_step(model, mesh, cell)
+    lowered = jitted.lower(*args)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    # raw HloCostAnalysis (counts while bodies ONCE — kept for reference)
+    flops_dev_raw = float(cost.get("flops", 0.0))
+    bytes_dev_raw = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())   # trip-count corrected
+    mem = mem_dict(compiled.memory_analysis())
+
+    a_params = S.abstract_params(model)
+    a_cache = None
+    if cell.kind == "decode":
+        a_cache = jax.eval_shape(functools.partial(
+            model.init_cache, cell.global_batch, cell.seq_len))
+    n_micro = (max(1, cell.global_batch
+                   // S._dp_size(mesh)) if cell.kind == "train" else 1)
+    ac = CM.step_cost(cfg, cell, a_params, n_micro=n_micro, a_cache=a_cache)
+    mf = model_flops(cfg, a_params, cell)
+
+    terms = {
+        "compute_s": ac.flops / (chips * PEAK_FLOPS),
+        "memory_s": ac.hbm_bytes / (chips * HBM_BW),
+        "collective_s": coll["total"] / (chips * ICI_BW),
+    }
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mfu = (mf["model_flops"] / (chips * PEAK_FLOPS)) / step_s if step_s else 0.0
+
+    return {
+        "arch": arch, "cell": cell.name, "mesh": mesh_name, "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "hlo_flops_per_device_raw": flops_dev_raw,
+        "hlo_bytes_per_device_raw": bytes_dev_raw,
+        "analytic": {"flops": ac.flops, "hbm_bytes": ac.hbm_bytes,
+                     "weight_bytes": ac.weight_bytes, **ac.detail},
+        "collectives": coll, "memory": mem,
+        "model_flops": mf, "roofline": terms, "bottleneck": bottleneck,
+        "roofline_step_s": step_s, "roofline_mfu": mfu,
+        "useful_fraction": (mf["model_flops"] / ac.flops
+                            if ac.flops else 0.0),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--include-skipped", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        f"dry-run needs 512 placeholder devices, got {len(jax.devices())}"
+    )
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16",
+                       make_production_mesh(multi_pod=False), 256))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pods2x16x16",
+                       make_production_mesh(multi_pod=True), 512))
+
+    archs = registry.ARCHS if args.arch == "all" else args.arch.split(",")
+    cells = (list(SHAPES.values()) if args.cell == "all"
+             else [SHAPES[c] for c in args.cell.split(",")])
+
+    failures = []
+    for arch in archs:
+        cfg = registry.get_config(arch)
+        for cell in cells:
+            if not registry.cell_supported(cfg, cell):
+                print(f"SKIP {arch} {cell.name} (documented in DESIGN.md §5)")
+                continue
+            for mesh_name, mesh, chips in meshes:
+                tag = f"{arch}_{cell.name}_{mesh_name}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"HAVE {tag} (cached; --force to redo)")
+                    continue
+                try:
+                    rec = run_cell(arch, cell, mesh, mesh_name, chips)
+                    jax.clear_caches()
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"OK   {tag}: compile={rec['compile_s']}s "
+                          f"bottleneck={rec['bottleneck']} "
+                          f"step={rec['roofline_step_s'] * 1e3:.2f}ms "
+                          f"mfu={rec['roofline_mfu']:.3f}")
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL {tag}: {e!r}")
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for tag, err in failures:
+            print(" ", tag, err[:200])
+        raise SystemExit(1)
+    print("\nall requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction (DESIGN.md §6).
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py sets
+XLA_FLAGS for 512 placeholder devices before any jax import).
+
+Topology:
+  single-pod  (16, 16)        axes ("data", "model")    = 256 chips (v5e pod)
+  multi-pod   (2, 16, 16)     axes ("pod", "data", "model") = 512 chips
+
+Scaling posture: growing ``pod`` adds DP replicas over DCN (gradient
+all-reduce crosses pods once per step, optionally int8-compressed —
+dist/compression.py); ``data``×``model`` stays within one pod's ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices=None) -> jax.sharding.Mesh:
+    """1×1 (or n×1) mesh over whatever devices exist — tests/examples."""
+    devices = devices if devices is not None else jax.devices()
+    return jax.make_mesh((len(devices), 1), ("data", "model"),
+                         devices=devices)

@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb harness — hypothesis → change → re-lower → validate.
+
+Runs the three selected cells through their optimization ladders (each rung
+is a DecodeOptions change with a recorded hypothesis and a napkin-math
+prediction), re-lowers/compiles on the production mesh, recomputes the
+three roofline terms, and writes the full iteration log to
+experiments/perf/<arch>_<cell>.json.  EXPERIMENTS.md §Perf is generated
+from these records.
+
+    PYTHONPATH=src python -m repro.launch.perf [--cell KEY]
+"""
+import argparse
+import functools
+import json
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.launch import costmodel as CM
+from repro.launch import steps as S
+from repro.launch.dryrun import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, collective_bytes, mem_dict, model_flops,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import DecodeOptions
+from repro.models.model_builder import build_model
+
+# ---------------------------------------------------------------------------
+# The three hillclimb cells (selection rationale in EXPERIMENTS.md §Perf):
+#   mistral-large decode_32k — most representative of the paper's technique
+#     (weight-stream reduction is §4.8's entire point on TPU);
+#   xlstm decode_32k        — the only collective-bound baseline;
+#   whisper decode_32k      — worst roofline fraction of the whole grid.
+# Each rung: (tag, options, hypothesis, predicted effect on dominant term).
+# ---------------------------------------------------------------------------
+LADDERS = {
+    "mistral-large-123b/decode_32k": [
+        ("baseline", DecodeOptions(),
+         "memory-bound: 1.5 TB bf16 KV cache dominates the 246 GB weight "
+         "stream (cache:weights ≈ 6:1)", "—"),
+        ("int8-kv", DecodeOptions(kv_dtype="int8"),
+         "cache bytes halve with int8 KV + per-(slot,head) scales; weights "
+         "untouched → memory term ≈ ×0.57 of baseline "
+         "((0.5·1.5T+0.25T)/1.75T)", "memory −43%"),
+        ("int8-kv+nm24", DecodeOptions(kv_dtype="int8", nm=(2, 4)),
+         "paper §4.8: 2:4-compressed linears stream 0.625× of dense bf16 "
+         "bytes (values 0.5 + int8 idx 0.125); on top of int8-kv the "
+         "memory term drops another ~9%", "memory −9% on top"),
+    ],
+    "xlstm-1.3b/decode_32k": [
+        ("baseline", DecodeOptions(),
+         "collective-bound: FSDP weight sharding all-gathers every "
+         "projection shard each token step across the data axis",
+         "—"),
+        ("tp-weights", DecodeOptions(weight_sharding="tp"),
+         "2.6 GB of weights fit TP-16-resident (163 MB/chip) — switching "
+         "decode to weight-stationary TP removes the per-step weight "
+         "all-gathers entirely; collective term should collapse to the "
+         "row-parallel output reductions", "collective −80%+"),
+        ("tp+nm24", DecodeOptions(weight_sharding="tp", nm=(2, 4)),
+         "with collectives gone the cell is memory-bound again; 2:4 "
+         "weights cut the dominant weight stream by 0.625×",
+         "memory −25%"),
+        ("tp+nm24+bf16state",
+         DecodeOptions(weight_sharding="tp", nm=(2, 4), kv_dtype="bf16"),
+         "memory is actually dominated by the fp32 mLSTM matrix memory "
+         "(B·H·hd²·L = 103 GB, 10× the weight stream) — store C/n in bf16 "
+         "(update math stays fp32): state bytes halve",
+         "memory −45%"),
+    ],
+    "whisper-medium/decode_32k": [
+        ("baseline", DecodeOptions(),
+         "worst cell of the grid (mfu 0.002): a 32k-slot self-attention "
+         "cache for a decoder whose horizon is 448 tokens, plus cross-"
+         "attention k/v re-projected from the 1500-frame source every "
+         "step", "—"),
+        ("cache448", DecodeOptions(cache_len=448),
+         "whisper's decoder never exceeds dec_seq=448 — architecture-aware "
+         "cache sizing cuts self-cache bytes 73× (32768→448 slots)",
+         "cache bytes ÷73"),
+        ("cache448+crosskv", DecodeOptions(cache_len=448, cross_cache=True),
+         "precompute per-layer cross-attention k/v once per request: "
+         "removes 2·B·1500·d·(2·Hkv·Dh)·L_dec MACs per step (the dominant "
+         "remaining compute) in exchange for streaming the cached cross-KV",
+         "compute −95%"),
+        ("cache448+crosskv+int8",
+         DecodeOptions(cache_len=448, cross_cache=True, kv_dtype="int8"),
+         "remaining traffic is weights + cross-KV reads; int8 self-cache "
+         "is small but free; the bigger lever left is batching",
+         "memory −few%"),
+    ],
+}
+
+
+def measure(arch: str, cell_name: str, opts: DecodeOptions, mesh, chips):
+    cell = SHAPES[cell_name]
+    cfg = registry.get_config(arch)
+    model = build_model(cfg)
+    t0 = time.perf_counter()
+    jitted, args = S.make_decode_step(model, mesh, cell, opts)
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    coll = collective_bytes(compiled.as_text())
+    mem = mem_dict(compiled.memory_analysis())
+
+    # cost model sees the option-transformed model/params/cache
+    cfg_eff = cfg.replace(kv_cache_dtype=opts.kv_dtype) if opts.kv_dtype \
+        else cfg
+    model_eff = build_model(cfg_eff)
+    a_params = (S.abstract_nm_params(model_eff, *opts.nm) if opts.nm
+                else S.abstract_params(model_eff))
+    max_len = opts.cache_len or cell.seq_len
+    a_cache = jax.eval_shape(functools.partial(
+        model_eff.init_cache, cell.global_batch, max_len))
+    ac = CM.step_cost(cfg_eff, cell, a_params, a_cache=a_cache,
+                      cross_cached=opts.cross_cache)
+    if opts.cross_cache:
+        # the cross-KV tree is also streamed — counted in step_cost
+        pass
+    mf = model_flops(cfg, S.abstract_params(model), cell)
+
+    terms = {
+        "compute_s": ac.flops / (chips * PEAK_FLOPS),
+        "memory_s": ac.hbm_bytes / (chips * HBM_BW),
+        "collective_s": coll["total"] / (chips * ICI_BW),
+    }
+    step_s = max(terms.values())
+    return {
+        "terms": terms,
+        "bottleneck": max(terms, key=terms.get),
+        "step_s": step_s,
+        "mfu": (mf["model_flops"] / (chips * PEAK_FLOPS)) / step_s,
+        "collectives": coll,
+        "memory": mem,
+        "analytic": {"flops": ac.flops, "hbm_bytes": ac.hbm_bytes,
+                     "weight_bytes": ac.weight_bytes, **ac.detail},
+        "compile_s": round(t_compile, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    chips = 256
+
+    keys = list(LADDERS) if args.cell == "all" else [args.cell]
+    for key in keys:
+        arch, cell_name = key.split("/")
+        records = []
+        prev = None
+        for tag, opts, hypothesis, prediction in LADDERS[key]:
+            rec = measure(arch, cell_name, opts, mesh, chips)
+            jax.clear_caches()
+            entry = {
+                "tag": tag, "hypothesis": hypothesis,
+                "prediction": prediction, **rec,
+            }
+            if prev is not None:
+                entry["speedup_vs_prev"] = prev["step_s"] / rec["step_s"]
+                entry["speedup_vs_baseline"] = (
+                    records[0]["step_s"] / rec["step_s"])
+            records.append(entry)
+            prev = rec
+            print(f"{key} [{tag}] step={rec['step_s'] * 1e3:.3f}ms "
+                  f"bottleneck={rec['bottleneck']} mfu={rec['mfu']:.4f} "
+                  f"(compile {rec['compile_s']}s)")
+        path = os.path.join(args.out, key.replace("/", "_") + ".json")
+        with open(path, "w") as f:
+            json.dump(records, f, indent=1)
+        base, last = records[0], records[-1]
+        print(f"== {key}: {base['step_s'] / last['step_s']:.2f}× total, "
+              f"mfu {base['mfu']:.4f} → {last['mfu']:.4f}\n")
+
+
+if __name__ == "__main__":
+    main()

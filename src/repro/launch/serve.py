@@ -1,0 +1,78 @@
+"""Serving driver — batched generation, optionally from a pruned+compressed
+checkpoint.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --requests 8 --prompt-len 16 --max-new 12 --nm
+
+``--nm`` prunes 2:4 with Thanos first and serves from the NmCompressed
+representation (paper §4.8; HBM-traffic win quantified in
+benchmarks/nm_decode_roofline.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core import PruneConfig
+from repro.models.model_builder import build_model
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve.compressed import compress_params, compressed_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=list(registry.ARCHS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--nm", action="store_true",
+                    help="Thanos-prune 2:4 and serve compressed weights")
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    if args.nm:
+        from repro.launch.prune import prune_arch
+
+        print("pruning 2:4 with Thanos first…")
+        pruned, report, _ = prune_arch(
+            args.arch, PruneConfig(method="thanos", pattern="nm", n=2, m=4,
+                                   block_size=64),
+            log=None,
+        )
+        params = compress_params(pruned, report.masks, 2, 4)
+        comp, dense = compressed_bytes(params)
+        if dense:
+            print(f"compressed weight bytes: {comp / dense:.3f} of dense")
+
+    engine = ServingEngine(
+        model, params,
+        ServeConfig(batch_slots=args.slots,
+                    max_len=args.prompt_len + args.max_new + 8),
+    )
+    rng = np.random.default_rng(0)
+    for uid in range(args.requests):
+        engine.submit(Request(
+            uid, rng.integers(0, cfg.vocab_size, size=args.prompt_len),
+            max_new=args.max_new,
+        ))
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in done)
+    print(f"{len(done)} requests, {tokens} tokens in {dt:.2f}s "
+          f"({tokens / dt:.1f} tok/s incl. compile)")
+    for r in done[:4]:
+        print(f"  req {r.uid}: {r.out}")
+
+
+if __name__ == "__main__":
+    main()

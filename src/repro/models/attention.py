@@ -1,0 +1,348 @@
+"""Attention variants: GQA (full / causal / sliding-window), MLA (DeepSeek),
+with training, prefill and single-token decode paths + KV caches.
+
+Cache layouts (decode):
+  GQA full     : k/v (B, L_max, H_kv, Dh), absolute slots.
+  GQA sliding  : k/v (B, W, H_kv, Dh) ring buffer, per-slot position ids.
+                 RoPE is applied at *write* time (absolute positions), which
+                 preserves relative phases between pre-rotated q and k.
+  MLA          : compressed c_kv (B, L_max, kv_lora) + k_rope (B, L_max, Dr);
+                 decode uses the absorbed formulation (weights folded into
+                 the query / output) so per-step cost is O(L·(kv_lora+Dr))
+                 and cache bytes are ~(kv_lora+Dr)/(H·(Dh_k+Dh_v)) of dense.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ==========================================================================
+# GQA
+# ==========================================================================
+def gqa_params(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": L.linear_params(ks[0], d, cfg.num_heads * hd, bias=cfg.attn_bias, dtype=dtype),
+        "wk": L.linear_params(ks[1], d, cfg.num_kv_heads * hd, dtype=dtype),
+        "wv": L.linear_params(ks[2], d, cfg.num_kv_heads * hd, bias=cfg.attn_bias, dtype=dtype),
+        "wo": L.linear_params(ks[3], cfg.num_heads * hd, d, bias=cfg.attn_bias, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = L.rmsnorm_params(hd, dtype)
+        p["knorm"] = L.rmsnorm_params(hd, dtype)
+    return p
+
+
+def _qkv(p, cfg, x, positions, theta, tape, path):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = L.dense(p["wq"], x, tape, path + ("wq",)).reshape(B, S, cfg.num_heads, hd)
+    k = L.dense(p["wk"], x, tape, path + ("wk",)).reshape(B, S, cfg.num_kv_heads, hd)
+    v = L.dense(p["wv"], x, tape, path + ("wv",)).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["qnorm"], q)
+        k = L.rmsnorm(p["knorm"], k)
+    if theta > 0:
+        q = L.apply_rope(q, positions, theta)
+        k = L.apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, num_heads, num_kv_heads):
+    """q/k (B,S,H,Dqk), v (B,T,Hkv,Dv), mask (B,1,S,T) bool — True = attend.
+
+    Dv may differ from Dqk (MLA).  Scale uses Dqk.
+    """
+    B, S, H, D = q.shape
+    g = num_heads // num_kv_heads
+    qg = q.reshape(B, S, num_kv_heads, g, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(D).astype(q.dtype)
+    scores = jnp.where(mask[:, :, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def causal_mask(S: int, T: int, offset: int = 0, window: int = 0) -> Array:
+    """(S, T) True = attend.  offset = absolute position of query 0."""
+    qpos = jnp.arange(S)[:, None] + offset
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def gqa_forward(p, cfg, x, positions, *, theta, window=0, is_causal=True,
+                tape=None, path=()) -> Array:
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions, theta, tape, path)
+    if is_causal:
+        m = causal_mask(S, S, 0, window)[None, None]
+    else:
+        m = jnp.ones((1, 1, S, S), bool)
+    out = _sdpa(q, k, v, jnp.broadcast_to(m, (B, 1, S, S)),
+                cfg.num_heads, cfg.num_kv_heads)
+    return L.dense(p["wo"], out.reshape(B, S, -1), tape, path + ("wo",))
+
+
+@jax.tree_util.register_pytree_node_class
+class GqaCache(NamedTuple):
+    k: Array          # (B, L, Hkv, Dh) — L = max_len (full) or window (SWA)
+    v: Array
+    pos_ids: Array    # (L,) absolute position stored in each slot (-1 empty)
+    window: int       # 0 = full cache (STATIC aux data, not traced)
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos_ids), self.window
+
+    @classmethod
+    def tree_unflatten(cls, window, children):
+        return cls(*children, window)
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantGqaCache(NamedTuple):
+    """int8 KV cache with per-(slot, kv-head) symmetric scales.
+
+    Halves cache HBM at rest and streamed per decode step vs bf16 (the
+    memory-roofline lever for long-context decode — EXPERIMENTS.md §Perf);
+    dequantize-on-read keeps attention numerics within int8 rounding.
+    """
+
+    k: Array          # (B, L, Hkv, Dh) int8
+    v: Array          # (B, L, Hkv, Dh) int8
+    k_scale: Array    # (B, L, Hkv) fp16-range scales (fp32)
+    v_scale: Array
+    pos_ids: Array    # (L,)
+    window: int
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.k_scale, self.v_scale,
+                self.pos_ids), self.window
+
+    @classmethod
+    def tree_unflatten(cls, window, children):
+        return cls(*children, window)
+
+
+def gqa_cache_init(cfg, batch: int, max_len: int, window: int = 0,
+                   dtype=jnp.float32):
+    slots = window if window > 0 else max_len
+    if getattr(cfg, "kv_cache_dtype", "") == "int8":
+        shape = (batch, slots, cfg.num_kv_heads, cfg.head_dim)
+        return QuantGqaCache(
+            k=jnp.zeros(shape, jnp.int8),
+            v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:3], jnp.float32),
+            v_scale=jnp.zeros(shape[:3], jnp.float32),
+            pos_ids=jnp.full((slots,), -1, jnp.int32),
+            window=window,
+        )
+    return GqaCache(
+        k=jnp.zeros((batch, slots, cfg.num_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, slots, cfg.num_kv_heads, cfg.head_dim), dtype),
+        pos_ids=jnp.full((slots,), -1, jnp.int32),
+        window=window,
+    )
+
+
+def _quantize_kv(t: Array) -> tuple[Array, Array]:
+    """(B, 1, Hkv, Dh) → int8 payload + (B, 1, Hkv) scale."""
+    scale = jnp.maximum(jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1),
+                        1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def gqa_decode(p, cfg, x, pos, cache, *, theta,
+               tape=None, path=()):
+    """One-token decode.  x (B, 1, d); pos () int32 absolute position."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions, theta, tape, path)
+    slots = cache.k.shape[1]
+    slot = pos % slots if cache.window > 0 else pos
+
+    if isinstance(cache, QuantGqaCache):
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        k_new = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
+        v_new = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
+        ks_new = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, slot, 0))
+        vs_new = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, slot, 0))
+        k_att = (k_new.astype(jnp.float32)
+                 * ks_new[..., None]).astype(x.dtype)
+        v_att = (v_new.astype(jnp.float32)
+                 * vs_new[..., None]).astype(x.dtype)
+        new_cache = QuantGqaCache(k_new, v_new, ks_new, vs_new,
+                                  cache.pos_ids.at[slot].set(pos),
+                                  cache.window)
+    else:
+        k_new = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+        v_new = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        k_att, v_att = k_new, v_new
+        new_cache = GqaCache(k_new, v_new, cache.pos_ids.at[slot].set(pos),
+                             cache.window)
+
+    pos_new = new_cache.pos_ids
+    valid = (pos_new >= 0) & (pos_new <= pos)
+    if cache.window:
+        valid &= pos_new > pos - cache.window
+    mask = jnp.broadcast_to(valid[None, None, None, :], (B, 1, 1, slots))
+    out = _sdpa(q, k_att, v_att, mask, cfg.num_heads, cfg.num_kv_heads)
+    y = L.dense(p["wo"], out.reshape(B, 1, -1), tape, path + ("wo",))
+    return y, new_cache
+
+
+# ==========================================================================
+# MLA (DeepSeek-V3)
+# ==========================================================================
+def mla_params(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d, H = cfg.d_model, cfg.num_heads
+    dq, dkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": L.linear_params(ks[0], d, dq, dtype=dtype),
+        "q_norm": L.rmsnorm_params(dq, dtype),
+        "wq_b": L.linear_params(ks[1], dq, H * (dn + dr), dtype=dtype),
+        "wkv_a": L.linear_params(ks[2], d, dkv + dr, dtype=dtype),
+        "kv_norm": L.rmsnorm_params(dkv, dtype),
+        "wkv_b": L.linear_params(ks[3], dkv, H * (dn + dv), dtype=dtype),
+        "wo": L.linear_params(ks[4], H * dv, d, dtype=dtype),
+    }
+
+
+def _mla_qkr(p, cfg, x, positions, tape, path):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = L.dense(p["wq_b"], L.rmsnorm(p["q_norm"],
+                L.dense(p["wq_a"], x, tape, path + ("wq_a",))),
+                tape, path + ("wq_b",)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = L.dense(p["wkv_a"], x, tape, path + ("wkv_a",))
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = L.rmsnorm(p["kv_norm"], c_kv)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_forward(p, cfg, x, positions, *, tape=None, path=()) -> Array:
+    """Training/prefill MLA: expand c_kv to per-head k/v, causal SDPA."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(p, cfg, x, positions, tape, path)
+    kv = L.dense(p["wkv_b"], c_kv, tape, path + ("wkv_b",)).reshape(
+        B, S, H, dn + dv
+    )
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1
+    )
+    mask = causal_mask(S, S)[None, None]
+    out = _sdpa(q, k, v, jnp.broadcast_to(mask, (B, 1, S, S)), H, H)
+    return L.dense(p["wo"], out.reshape(B, S, -1), tape, path + ("wo",))
+
+
+class MlaCache(NamedTuple):
+    c_kv: Array     # (B, L, kv_lora)
+    k_rope: Array   # (B, L, Dr)
+    length: Array   # () int32 — filled prefix
+
+
+class QuantMlaCache(NamedTuple):
+    """int8 latent cache with per-(B, slot) scales (c_kv is already a
+    compressed latent — int8 on top halves its HBM footprint again)."""
+
+    c_kv: Array       # (B, L, kv_lora) int8
+    c_scale: Array    # (B, L) fp32
+    k_rope: Array     # (B, L, Dr) kept bf16 (tiny, phase-sensitive)
+    length: Array
+
+
+def mla_cache_init(cfg, batch: int, max_len: int, dtype=jnp.float32):
+    if getattr(cfg, "kv_cache_dtype", "") == "int8":
+        return QuantMlaCache(
+            c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), jnp.int8),
+            c_scale=jnp.zeros((batch, max_len), jnp.float32),
+            k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+            length=jnp.zeros((), jnp.int32),
+        )
+    return MlaCache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode(p, cfg, x, pos, cache: MlaCache, *, tape=None, path=()):
+    """Absorbed single-token decode: attends in the compressed c_kv space.
+
+    score_t = q_nopeᵀ W_kᵀ c_kv[t] + q_ropeᵀ k_rope[t]; the W_k absorb costs
+    O(H·dn·dkv) once per step, attention is O(L·(dkv+dr)) per head-sum —
+    this is what makes 32k/500k-class decode memory-feasible for MLA.
+    """
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dv, dkv = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkr(p, cfg, x, positions, tape, path)
+    k_rope_upd = (k_rope_new[:, None, :] if k_rope_new.ndim == 2
+                  else k_rope_new)
+
+    if isinstance(cache, QuantMlaCache):
+        scale = jnp.maximum(jnp.max(jnp.abs(
+            c_kv_new.astype(jnp.float32)), axis=-1), 1e-8) / 127.0
+        cq = jnp.clip(jnp.round(c_kv_new.astype(jnp.float32)
+                                / scale[..., None]), -127, 127).astype(jnp.int8)
+        cache = QuantMlaCache(
+            c_kv=jax.lax.dynamic_update_slice(cache.c_kv, cq, (0, pos, 0)),
+            c_scale=jax.lax.dynamic_update_slice(cache.c_scale, scale,
+                                                 (0, pos)),
+            k_rope=jax.lax.dynamic_update_slice(cache.k_rope, k_rope_upd,
+                                                (0, pos, 0)),
+            length=pos + 1,
+        )
+        c_att = (cache.c_kv.astype(jnp.float32)
+                 * cache.c_scale[..., None]).astype(x.dtype)
+    else:
+        cache = MlaCache(
+            c_kv=jax.lax.dynamic_update_slice(cache.c_kv, c_kv_new, (0, pos, 0)),
+            k_rope=jax.lax.dynamic_update_slice(cache.k_rope, k_rope_upd,
+                                                (0, pos, 0)),
+            length=pos + 1,
+        )
+        c_att = cache.c_kv
+    # absorb W_k into q:  q_eff (B,H,dkv)
+    wkv_b = p["wkv_b"]["w"].reshape(dkv, H, dn + dv)
+    w_k = wkv_b[..., :dn]                                   # (dkv, H, dn)
+    w_v = wkv_b[..., dn:]                                   # (dkv, H, dv)
+    q_eff = jnp.einsum("bhd,khd->bhk", q_nope[:, 0], w_k)   # (B,H,dkv)
+    scores = jnp.einsum("bhk,blk->bhl", q_eff, c_att) + jnp.einsum(
+        "bhd,bld->bhl", q_rope[:, 0], cache.k_rope
+    )
+    scale = 1.0 / jnp.sqrt(float(dn + cfg.qk_rope_head_dim))
+    valid = jnp.arange(cache.c_kv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, :], scores.astype(jnp.float32) * scale,
+                       NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhl,blk->bhk", probs, c_att)          # (B,H,dkv)
+    out = jnp.einsum("bhk,khd->bhd", ctx, w_v)              # (B,H,dv)
+    y = L.dense(p["wo"], out.reshape(B, 1, H * dv), tape, path + ("wo",))
+    return y, cache

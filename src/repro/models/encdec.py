@@ -1,0 +1,261 @@
+"""Whisper-style encoder-decoder (whisper-medium backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_frames, d_model).  The backbone
+is faithful: LayerNorm + GELU, full bidirectional encoder self-attention,
+causal decoder self-attention + cross-attention, sinusoidal positions,
+learned token embeddings with tied head.
+
+Blockwise-pruning order (Alg. 3): encoder blocks 0..E-1 then decoder blocks
+E..E+D-1; the carry holds both streams.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- init
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        n = cfg.encoder_layers + cfg.decoder_layers
+        keys = jax.random.split(rng, n + 2)
+        params = {
+            "embed": L.embedding_params(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "enc_norm": L.layernorm_params(cfg.d_model, dt),
+            "dec_norm": L.layernorm_params(cfg.d_model, dt),
+            "enc": {}, "dec": {},
+        }
+        for i in range(cfg.encoder_layers):
+            params["enc"][i] = self._enc_block_params(keys[1 + i], dt)
+        for i in range(cfg.decoder_layers):
+            params["dec"][i] = self._dec_block_params(keys[1 + cfg.encoder_layers + i], dt)
+        return params
+
+    def _attn_params(self, key, dt):
+        return A.gqa_params(key, self.cfg, dt)
+
+    def _mlp_params(self, key, dt):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "fc1": L.linear_params(k1, cfg.d_model, cfg.d_ff, bias=True, dtype=dt),
+            "fc2": L.linear_params(k2, cfg.d_ff, cfg.d_model, bias=True, dtype=dt),
+        }
+
+    def _enc_block_params(self, key, dt):
+        ka, kf = jax.random.split(key)
+        return {
+            "ln1": L.layernorm_params(self.cfg.d_model, dt),
+            "ln2": L.layernorm_params(self.cfg.d_model, dt),
+            "attn": self._attn_params(ka, dt),
+            "mlp": self._mlp_params(kf, dt),
+        }
+
+    def _dec_block_params(self, key, dt):
+        ka, kx, kf = jax.random.split(key, 3)
+        return {
+            "ln1": L.layernorm_params(self.cfg.d_model, dt),
+            "lnx": L.layernorm_params(self.cfg.d_model, dt),
+            "ln2": L.layernorm_params(self.cfg.d_model, dt),
+            "attn": self._attn_params(ka, dt),
+            "xattn": self._attn_params(kx, dt),
+            "mlp": self._mlp_params(kf, dt),
+        }
+
+    # ------------------------------------------------------------- pieces
+    def _mlp(self, blk, x, tape, path):
+        h = jax.nn.gelu(L.dense(blk["mlp"]["fc1"], x, tape, path + ("mlp", "fc1")))
+        return L.dense(blk["mlp"]["fc2"], h, tape, path + ("mlp", "fc2"))
+
+    def _cross_attn(self, blk, x, enc_kv, tape, path):
+        """Cross-attention: q from decoder x, k/v from encoder output."""
+        cfg = self.cfg
+        p = blk["xattn"]
+        B, S, _ = x.shape
+        T = enc_kv.shape[1]
+        hd = cfg.head_dim
+        q = L.dense(p["wq"], x, tape, path + ("xattn", "wq")).reshape(
+            B, S, cfg.num_heads, hd)
+        k = L.dense(p["wk"], enc_kv, tape, path + ("xattn", "wk")).reshape(
+            B, T, cfg.num_kv_heads, hd)
+        v = L.dense(p["wv"], enc_kv, tape, path + ("xattn", "wv")).reshape(
+            B, T, cfg.num_kv_heads, hd)
+        mask = jnp.ones((B, 1, S, T), bool)
+        out = A._sdpa(q, k, v, mask, cfg.num_heads, cfg.num_kv_heads)
+        return L.dense(p["wo"], out.reshape(B, S, -1), tape, path + ("xattn", "wo"))
+
+    # ------------------------------------------------------ blockwise parts
+    def embed_batch(self, params, batch) -> dict:
+        cfg = self.cfg
+        frames = batch["frames"].astype(cfg.jdtype)          # (B, Sf, d) stub
+        B, Sf, _ = frames.shape
+        enc_h = frames + L.sinusoidal_positions(Sf, cfg.d_model).astype(frames.dtype)
+        dec_tokens = batch["dec_tokens"]
+        Sd = dec_tokens.shape[1]
+        dec_h = L.embed(params["embed"], dec_tokens)
+        dec_h = dec_h + L.sinusoidal_positions(Sd, cfg.d_model).astype(dec_h.dtype)
+        pos = jnp.broadcast_to(jnp.arange(Sd, dtype=jnp.int32)[None], (B, Sd))
+        return {"enc_h": enc_h, "dec_h": dec_h, "positions": pos}
+
+    def num_blocks(self) -> int:
+        return self.cfg.encoder_layers + self.cfg.decoder_layers
+
+    def block_param_path(self, i: int) -> tuple:
+        E = self.cfg.encoder_layers
+        return ("enc", i) if i < E else ("dec", i - E)
+
+    def behavior_key(self, i: int) -> tuple:
+        return ("enc" if i < self.cfg.encoder_layers else "dec",)
+
+    def block(self, params, i: int, carry: dict, tape=None) -> dict:
+        cfg = self.cfg
+        E = cfg.encoder_layers
+        if i < E:
+            blk = params["enc"][i]
+            path = ("enc", i)
+            h = carry["enc_h"]
+            hn = L.layernorm(blk["ln1"], h)
+            pos0 = jnp.zeros((h.shape[0], h.shape[1]), jnp.int32)
+            attn = A.gqa_forward(blk["attn"], cfg, hn, pos0, theta=0.0,
+                                 is_causal=False, tape=tape, path=path + ("attn",))
+            h = h + attn
+            h = h + self._mlp(blk, L.layernorm(blk["ln2"], h), tape, path)
+            return {**carry, "enc_h": h}
+        j = i - E
+        blk = params["dec"][j]
+        path = ("dec", j)
+        h = carry["dec_h"]
+        hn = L.layernorm(blk["ln1"], h)
+        attn = A.gqa_forward(blk["attn"], cfg, hn, carry["positions"], theta=0.0,
+                             is_causal=True, tape=tape, path=path + ("attn",))
+        h = h + attn
+        # cross-attention reads the *post-norm* encoder output (matches encode())
+        enc_src = L.layernorm(params["enc_norm"], carry["enc_h"])
+        h = h + self._cross_attn(blk, L.layernorm(blk["lnx"], h),
+                                 enc_src, tape, path)
+        h = h + self._mlp(blk, L.layernorm(blk["ln2"], h), tape, path)
+        return {**carry, "dec_h": h}
+
+    def block_linear_paths(self, params, i: int) -> list[tuple]:
+        E = self.cfg.encoder_layers
+        if i < E:
+            path = ("enc", i)
+            return ([path + ("attn", n, "w") for n in ("wq", "wk", "wv", "wo")]
+                    + [path + ("mlp", n, "w") for n in ("fc1", "fc2")])
+        path = ("dec", i - E)
+        return ([path + ("attn", n, "w") for n in ("wq", "wk", "wv", "wo")]
+                + [path + ("xattn", n, "w") for n in ("wq", "wk", "wv", "wo")]
+                + [path + ("mlp", n, "w") for n in ("fc1", "fc2")])
+
+    # ------------------------------------------------------------- forward
+    def forward(self, params, batch, tape=None) -> Array:
+        carry = self.embed_batch(params, batch)
+        for i in range(self.num_blocks()):
+            carry = self.block(params, i, carry, tape)
+        h = L.layernorm(params["dec_norm"], carry["dec_h"])
+        return L.unembed(params["embed"], h)
+
+    def loss_from_carry(self, params, carry, batch) -> Array:
+        h = L.layernorm(params["dec_norm"], carry["dec_h"])
+        logits = L.unembed(params["embed"], h)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.pad(batch["dec_tokens"][:, 1:], ((0, 0), (0, 1)),
+                             constant_values=-1)
+        return L.cross_entropy(logits, labels)
+
+    def loss(self, params, batch) -> Array:
+        carry = self.embed_batch(params, batch)
+        for i in range(self.num_blocks()):
+            carry = self.block(params, i, carry)
+        return self.loss_from_carry(params, carry, batch)
+
+    # ------------------------------------------------------------- serving
+    def encode(self, params, frames) -> Array:
+        cfg = self.cfg
+        B, Sf, _ = frames.shape
+        h = frames.astype(cfg.jdtype) + L.sinusoidal_positions(
+            Sf, cfg.d_model).astype(cfg.jdtype)
+        carry = {"enc_h": h, "dec_h": jnp.zeros((B, 1, cfg.d_model), cfg.jdtype),
+                 "positions": jnp.zeros((B, 1), jnp.int32)}
+        for i in range(cfg.encoder_layers):
+            carry = self.block(params, i, carry)
+        return L.layernorm(params["enc_norm"], carry["enc_h"])
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        return {
+            j: A.gqa_cache_init(cfg, batch, max_len, dtype=cfg.jdtype)
+            for j in range(cfg.decoder_layers)
+        }
+
+    def precompute_cross_kv(self, params, enc_out):
+        """Per-layer cross-attention k/v, computed ONCE per request.
+
+        The naive decode path re-projects the full (B, T_enc, d) source
+        through wk/wv at EVERY step of EVERY layer — 2·B·T_enc·d·(Hkv·Dh)
+        MACs per layer per token.  Caching them turns the per-step cross
+        cost into pure attention reads (EXPERIMENTS.md §Perf, whisper cell).
+        """
+        cfg = self.cfg
+        B, T, _ = enc_out.shape
+        hd = cfg.head_dim
+        out = {}
+        for j in range(cfg.decoder_layers):
+            p = params["dec"][j]["xattn"]
+            k = L.dense(p["wk"], enc_out).reshape(B, T, cfg.num_kv_heads, hd)
+            v = L.dense(p["wv"], enc_out).reshape(B, T, cfg.num_kv_heads, hd)
+            out[j] = {"k": k, "v": v}
+        return out
+
+    def _cross_attn_cached(self, blk, x, kv):
+        cfg = self.cfg
+        p = blk["xattn"]
+        B, S, _ = x.shape
+        k, v = kv["k"], kv["v"]
+        q = L.dense(p["wq"], x).reshape(B, S, cfg.num_heads, cfg.head_dim)
+        mask = jnp.ones((B, 1, S, k.shape[1]), bool)
+        out = A._sdpa(q, k, v, mask, cfg.num_heads, cfg.num_kv_heads)
+        return L.dense(p["wo"], out.reshape(B, S, -1))
+
+    def decode_step(self, params, cache, tokens, pos, enc_out):
+        """One decoder token against a (B, T_enc, d) encoded source.
+
+        ``enc_out`` may instead be a precomputed cross-KV dict from
+        ``precompute_cross_kv`` (the optimized serving path).
+        """
+        cfg = self.cfg
+        B = tokens.shape[0]
+        cross_cached = isinstance(enc_out, dict)
+        h = L.embed(params["embed"], tokens)
+        # absolute sinusoidal position for this step
+        sin_table = L.sinusoidal_positions(cache[0].k.shape[1], cfg.d_model)
+        h = h + jax.lax.dynamic_slice(
+            sin_table, (pos, 0), (1, cfg.d_model)
+        )[None].astype(h.dtype)
+        new_cache = {}
+        for j in range(cfg.decoder_layers):
+            blk = params["dec"][j]
+            hn = L.layernorm(blk["ln1"], h)
+            attn, new_cache[j] = A.gqa_decode(blk["attn"], cfg, hn, pos,
+                                              cache[j], theta=0.0)
+            h = h + attn
+            hx = L.layernorm(blk["lnx"], h)
+            if cross_cached:
+                h = h + self._cross_attn_cached(blk, hx, enc_out[j])
+            else:
+                h = h + self._cross_attn(blk, hx, enc_out, None, ())
+            h = h + self._mlp(blk, L.layernorm(blk["ln2"], h), None, ())
+        h = L.layernorm(params["dec_norm"], h)
+        return L.unembed(params["embed"], h), new_cache

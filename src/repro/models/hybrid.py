@@ -1,0 +1,197 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with *shared* transformer blocks
+interleaved every ``attn_every`` layers.  The shared blocks (two alternating
+parameter sets, as in Zamba2) contain GQA attention + a gated MLP and are
+re-applied with the same weights at each interleave point.
+
+Prunable linears: every Mamba in/out projection + the shared blocks'
+attention/MLP projections (pruned once — they are one set of weights; the
+calibration Hessian accumulates over *all* invocation sites, which is the
+correct treatment of weight sharing under objective Eq. 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Array = jax.Array
+
+
+class HybridLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def _shared_points(self) -> list[int]:
+        cfg = self.cfg
+        return [i for i in range(cfg.num_layers)
+                if cfg.attn_every and (i + 1) % cfg.attn_every == 0]
+
+    # ---------------------------------------------------------------- init
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        keys = jax.random.split(rng, cfg.num_layers + cfg.num_shared_attn + 2)
+        params = {
+            "embed": L.embedding_params(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": L.norm_params(cfg.norm, cfg.d_model, dt),
+            "mamba": {}, "shared": {},
+        }
+        for i in range(cfg.num_layers):
+            kn, km = jax.random.split(keys[1 + i])
+            params["mamba"][i] = {
+                "ln": L.norm_params(cfg.norm, cfg.d_model, dt),
+                "mixer": S.mamba2_params(km, cfg, dt),
+            }
+        for s in range(cfg.num_shared_attn):
+            ka, kf = jax.random.split(keys[1 + cfg.num_layers + s])
+            k1, k2, k3 = jax.random.split(kf, 3)
+            params["shared"][s] = {
+                "ln1": L.norm_params(cfg.norm, cfg.d_model, dt),
+                "ln2": L.norm_params(cfg.norm, cfg.d_model, dt),
+                "attn": A.gqa_params(ka, cfg, dt),
+                "mlp": {
+                    "gate": L.linear_params(k1, cfg.d_model, cfg.d_ff, dtype=dt),
+                    "up": L.linear_params(k2, cfg.d_model, cfg.d_ff, dtype=dt),
+                    "down": L.linear_params(k3, cfg.d_ff, cfg.d_model, dtype=dt),
+                },
+            }
+        return params
+
+    # ------------------------------------------------------ blockwise parts
+    def embed_batch(self, params, batch) -> dict:
+        tokens = batch["tokens"]
+        h = L.embed(params["embed"], tokens)
+        B, Sq, _ = h.shape
+        pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+        return {"h": h, "positions": pos}
+
+    def num_blocks(self) -> int:
+        return self.cfg.num_layers
+
+    def block_param_path(self, i: int) -> tuple:
+        return ("mamba", i)
+
+    def behavior_key(self, i: int) -> tuple:
+        cfg = self.cfg
+        shared = bool(cfg.attn_every and (i + 1) % cfg.attn_every == 0)
+        which = (((i + 1) // cfg.attn_every - 1) % cfg.num_shared_attn
+                 if shared else -1)
+        return (shared, which)
+
+    def _shared_apply(self, params, which: int, h, pos, tape, window):
+        cfg = self.cfg
+        sb = params["shared"][which]
+        path = ("shared", which)
+        hn = L.norm(sb["ln1"], h)
+        attn = A.gqa_forward(sb["attn"], cfg, hn, pos, theta=cfg.rope_theta,
+                             window=window, tape=tape, path=path + ("attn",))
+        h = h + attn
+        hn = L.norm(sb["ln2"], h)
+        act = L.act_fn(cfg.act)
+        ff = L.dense(sb["mlp"]["down"],
+                     act(L.dense(sb["mlp"]["gate"], hn, tape, path + ("mlp", "gate")))
+                     * L.dense(sb["mlp"]["up"], hn, tape, path + ("mlp", "up")),
+                     tape, path + ("mlp", "down"))
+        return h + ff
+
+    def block(self, params, i: int, carry: dict, tape=None) -> dict:
+        cfg = self.cfg
+        h, pos = carry["h"], carry["positions"]
+        mb = params["mamba"][i]
+        path = ("mamba", i)
+        h = h + S.mamba2_forward(mb["mixer"], cfg, L.norm(mb["ln"], h),
+                                 tape=tape, path=path + ("mixer",))
+        if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+            which = ((i + 1) // cfg.attn_every - 1) % cfg.num_shared_attn
+            h = self._shared_apply(params, which, h, pos, tape,
+                                   window=cfg.sliding_window)
+        return {"h": h, "positions": pos}
+
+    def block_linear_paths(self, params, i: int) -> list[tuple]:
+        cfg = self.cfg
+        paths = [("mamba", i, "mixer", n, "w") for n in ("in_proj", "out_proj")]
+        # each shared set is pruned at *its own* last invocation, with the
+        # Hessian accumulated over every earlier site (core/schedule.py
+        # persists accumulators across blocks)
+        pts = self._shared_points()
+        for s in range(cfg.num_shared_attn):
+            s_pts = [p for p in pts
+                     if ((p + 1) // cfg.attn_every - 1) % cfg.num_shared_attn
+                     == s]
+            if s_pts and i == s_pts[-1]:
+                base = ("shared", s)
+                paths += [base + ("attn", n, "w")
+                          for n in ("wq", "wk", "wv", "wo")]
+                paths += [base + ("mlp", n, "w")
+                          for n in ("gate", "up", "down")]
+        return paths
+
+    # ------------------------------------------------------------- forward
+    def forward(self, params, batch, tape=None) -> Array:
+        carry = self.embed_batch(params, batch)
+        for i in range(self.cfg.num_layers):
+            carry = self.block(params, i, carry, tape)
+        h = L.norm(params["final_norm"], carry["h"])
+        return L.unembed(params["embed"], h)
+
+    def loss_from_carry(self, params, carry, batch) -> Array:
+        h = L.norm(params["final_norm"], carry["h"])
+        logits = L.unembed(params["embed"], h)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)),
+                             constant_values=-1)
+        return L.cross_entropy(logits, labels)
+
+    def loss(self, params, batch) -> Array:
+        carry = self.embed_batch(params, batch)
+        for i in range(self.cfg.num_layers):
+            carry = self.block(params, i, carry)
+        return self.loss_from_carry(params, carry, batch)
+
+    # ------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        cache = {"mamba": {}, "shared": {}}
+        for i in range(cfg.num_layers):
+            cache["mamba"][i] = S.mamba2_cache_init(cfg, batch, cfg.jdtype)
+        # one KV cache per shared-block invocation point (windowed)
+        w = cfg.sliding_window or max_len
+        for j, _ in enumerate(self._shared_points()):
+            cache["shared"][j] = A.gqa_cache_init(
+                cfg, batch, max_len, window=min(w, max_len), dtype=cfg.jdtype
+            )
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        h = L.embed(params["embed"], tokens)
+        new_cache = {"mamba": {}, "shared": {}}
+        shared_j = 0
+        for i in range(cfg.num_layers):
+            mb = params["mamba"][i]
+            out, new_cache["mamba"][i] = S.mamba2_decode(
+                mb["mixer"], cfg, L.norm(mb["ln"], h), cache["mamba"][i]
+            )
+            h = h + out
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                which = ((i + 1) // cfg.attn_every - 1) % cfg.num_shared_attn
+                sb = params["shared"][which]
+                hn = L.norm(sb["ln1"], h)
+                attn, new_cache["shared"][shared_j] = A.gqa_decode(
+                    sb["attn"], cfg, hn, pos, cache["shared"][shared_j],
+                    theta=cfg.rope_theta,
+                )
+                h = h + attn
+                hn = L.norm(sb["ln2"], h)
+                act = L.act_fn(cfg.act)
+                ff = L.dense(sb["mlp"]["down"],
+                             act(L.dense(sb["mlp"]["gate"], hn)) *
+                             L.dense(sb["mlp"]["up"], hn))
+                h = h + ff
+                shared_j += 1
+        h = L.norm(params["final_norm"], h)
+        return L.unembed(params["embed"], h), new_cache

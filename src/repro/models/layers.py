@@ -1,0 +1,165 @@
+"""Shared NN layers — pure-JAX, tape-instrumented for Alg.-3 calibration.
+
+Every prunable linear goes through ``dense()``, which (when a capture tape is
+threaded) records its input activations so the pruning driver can accumulate
+the layer Hessian ``2XXᵀ``.  Params are nested dicts; kernels are stored
+``(in, out)`` (transposed to the paper's (c, b) layout by the driver).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Tape = dict | None
+Path = tuple[Any, ...]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def he_init(key, shape, dtype=jnp.float32, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, dtype) * (2.0 / fan) ** 0.5
+
+
+def linear_params(key, d_in: int, d_out: int, *, bias: bool = False,
+                  dtype=jnp.float32) -> dict:
+    p = {"w": he_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def stacked_linear_params(key, n: int, d_in: int, d_out: int,
+                          dtype=jnp.float32) -> dict:
+    """n stacked expert kernels (n, d_in, d_out)."""
+    return {"w": he_init(key, (n, d_in, d_out), dtype, fan_in=d_in)}
+
+
+# --------------------------------------------------------------------------
+# tape-instrumented linears
+# --------------------------------------------------------------------------
+def dense(p: dict, x: Array, tape: Tape = None, path: Path = ()) -> Array:
+    """y = x @ W (+ b).  x: (..., d_in).  Records x on the tape.
+
+    If the kernel has been swapped for an ``NmCompressed`` leaf (paper §4.8
+    serving path), the matmul consumes the compressed representation — on
+    TPU through kernels/nm_spmm; here the fused one-hot expand + dot.
+    """
+    w = p["w"]
+    if type(w).__name__ == "NmCompressed":
+        from repro.kernels import ops as kops
+
+        y = kops.nm_matmul(x, w, impl="ref")
+    else:
+        if tape is not None:
+            tape[path + ("w",)] = x.reshape(-1, x.shape[-1])
+        y = x @ w
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def stacked_dense(p: dict, x: Array, tape: Tape = None, path: Path = ()) -> Array:
+    """Batched expert matmul: x (E, C, d_in) @ W (E, d_in, d_out).
+
+    Tape records per-expert activations keyed (path, 'w', e) so the driver
+    prunes each expert slice with its own routed-token Hessian.
+    """
+    if tape is not None:
+        for e in range(p["w"].shape[0]):
+            tape[path + ("w", e)] = x[e]
+    return jnp.einsum("ecd,edf->ecf", x, p["w"])
+
+
+# --------------------------------------------------------------------------
+# norms / activations
+# --------------------------------------------------------------------------
+def rmsnorm_params(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"]
+
+
+def layernorm_params(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def norm(p: dict, x: Array) -> Array:
+    return layernorm(p, x) if "bias" in p else rmsnorm(p, x)
+
+
+def norm_params(kind: str, d: int, dtype=jnp.float32) -> dict:
+    return layernorm_params(d, dtype) if kind == "layernorm" else rmsnorm_params(d, dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)                   # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (B,S,Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    """Whisper-style sinusoidal absolute embeddings (S, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(0, d, 2, dtype=jnp.float32) / d * jnp.log(10000.0))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# embeddings / head
+# --------------------------------------------------------------------------
+def embedding_params(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: dict, tokens: Array) -> Array:
+    return p["table"][tokens]
+
+
+def unembed(p: dict, x: Array) -> Array:
+    """Tied LM head (logits = x @ tableᵀ)."""
+    return x @ p["table"].T
+
+
+def cross_entropy(logits: Array, labels: Array, ignore: int = -1) -> Array:
+    """Mean next-token CE; labels == ignore are masked out."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    mask = (labels != ignore).astype(jnp.float32)
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)

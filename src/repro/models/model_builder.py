@@ -1,0 +1,42 @@
+"""Model factory + the generic Alg.-3 pruning adapter."""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.transformer import TransformerLM
+from repro.models.xlstm_lm import XlstmLM
+
+
+def build_model(cfg):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        return XlstmLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+class ModelAdapter:
+    """BlockwiseAdapter (core/schedule.py) over any zoo model."""
+
+    def __init__(self, model):
+        self.model = model
+
+    def num_blocks(self, params) -> int:
+        return self.model.num_blocks()
+
+    def prepare(self, params, batch) -> Any:
+        return self.model.embed_batch(params, batch)
+
+    def block_apply(self, params, i: int, carry, *, capture: bool):
+        tape: dict = {} if capture else None
+        out = self.model.block(params, i, carry, tape=tape)
+        return out, (tape or {})
+
+    def block_linear_paths(self, params, i: int):
+        return self.model.block_linear_paths(params, i)

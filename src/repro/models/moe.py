@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN — sort-based capacity dispatch (MegaBlocks-style,
+static shapes), expert-parallel over the ``model`` mesh axis.
+
+Dispatch: flatten tokens, route top-k, sort (token, expert) pairs by expert,
+scatter the first C survivors per expert into an (E, C, d) buffer (overflow
+tokens are dropped — capacity_factor controls how rare that is), run the
+gated FFN as batched einsums over the stacked expert kernels, gather back and
+combine with router weights.  Everything is static-shaped and jit/pjit-safe;
+under pjit the (E, C, d) buffers shard on the expert axis, giving the usual
+all-to-all dispatch pattern.
+
+Expert kernels are stored stacked (E, d_in, d_out); the pruning driver
+addresses slice e via path (..., 'w', e) and accumulates that expert's
+Hessian only over tokens routed to it (zero-padded capacity slots contribute
+nothing to XXᵀ).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def moe_params(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    p = {
+        "router": L.linear_params(ks[0], d, E, dtype=dtype),  # kept dense
+        "gate": L.stacked_linear_params(ks[1], E, d, f, dtype),
+        "up": L.stacked_linear_params(ks[2], E, d, f, dtype),
+        "down": L.stacked_linear_params(ks[3], E, f, d, dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": L.linear_params(kk[0], d, fs, dtype=dtype),
+            "up": L.linear_params(kk[1], d, fs, dtype=dtype),
+            "down": L.linear_params(kk[2], fs, d, dtype=dtype),
+        }
+    return p
+
+
+def capacity(num_tokens: int, k: int, num_experts: int,
+             capacity_factor: float = 1.25) -> int:
+    c = int(num_tokens * k / num_experts * capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for lane alignment
+
+
+def moe_ffn(p: dict, x: Array, cfg, *, tape=None, path=()) -> Array:
+    """x: (B, S, d) → (B, S, d)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    C = capacity(T, k, E, cfg.capacity_factor)
+    xt = x.reshape(T, d)
+
+    # ---- routing (router stays dense / unpruned) --------------------------
+    logits = xt @ p["router"]["w"]                             # (T, E)
+    gates, ids = jax.lax.top_k(jax.nn.softmax(logits.astype(jnp.float32)), k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)     # renorm top-k
+
+    # ---- sort-based dispatch ----------------------------------------------
+    flat_ids = ids.reshape(-1)                                 # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_ids, stable=True)
+    s_ids, s_tok = flat_ids[order], flat_tok[order]
+    # index within each expert group
+    grp_start = jnp.searchsorted(s_ids, s_ids, side="left")
+    idx_in_grp = jnp.arange(T * k) - grp_start
+    keep = idx_in_grp < C
+    # scatter into capacity buffer (dropped tokens go to a trash expert E)
+    dst_e = jnp.where(keep, s_ids, E)
+    dst_c = jnp.where(keep, idx_in_grp, 0)
+    buf = jnp.zeros((E + 1, C, d), xt.dtype).at[dst_e, dst_c].set(xt[s_tok])
+    buf = buf[:E]
+
+    # ---- expert computation (shardable on E) -------------------------------
+    act = L.act_fn(cfg.act)
+    h = act(L.stacked_dense(p["gate"], buf, tape, path + ("gate",))) * \
+        L.stacked_dense(p["up"], buf, tape, path + ("up",))
+    out_buf = L.stacked_dense(p["down"], h, tape, path + ("down",))  # (E,C,d)
+
+    # ---- gather back + combine --------------------------------------------
+    y_sorted = jnp.where(keep[:, None], out_buf[dst_e.clip(0, E - 1), dst_c], 0.0)
+    y_flat = jnp.zeros((T * k, d), xt.dtype).at[order].set(y_sorted)
+    y = jnp.sum(
+        y_flat.reshape(T, k, d) * gates[..., None].astype(xt.dtype), axis=1
+    )
+
+    # ---- shared experts (DeepSeek-style, always-on) ------------------------
+    if "shared" in p:
+        sp = p["shared"]
+        hs = act(L.dense(sp["gate"], xt, tape, path + ("shared", "gate"))) * \
+             L.dense(sp["up"], xt, tape, path + ("shared", "up"))
+        y = y + L.dense(sp["down"], hs, tape, path + ("shared", "down"))
+
+    return y.reshape(B, S, d)
+
+
+def moe_linear_paths(p: dict, path=()) -> list[tuple]:
+    """Prunable paths: every expert slice of gate/up/down + shared FFN."""
+    E = p["gate"]["w"].shape[0]
+    paths = []
+    for name in ("gate", "up", "down"):
+        paths += [path + (name, "w", e) for e in range(E)]
+    if "shared" in p:
+        paths += [path + ("shared", n, "w") for n in ("gate", "up", "down")]
+    return paths

@@ -1,0 +1,148 @@
+"""Mamba2-style selective state-space block (for Zamba2).
+
+State-space recurrence per head h with scalar decay (SSD formulation):
+
+    s_t = a_t · s_{t-1} + dt_t · B_t ⊗ x_t        s ∈ R^{d_head × d_state}
+    y_t = s_t · C_t + D ⊙ x_t
+
+``a_t = exp(-softplus(A_log)·dt_t)`` is scalar per head per step, so the
+sequence recurrence is a first-order linear scan → ``jax.lax.associative_scan``
+parallelizes it (log-depth on TPU).  Single-token decode carries (s, conv)
+state explicitly — O(1) per token, which is what qualifies the hybrid archs
+for the 500k-decode shape cell.
+
+Prunable linears (per paper §1.1): in_proj, out_proj (+ the dt/B/C projection
+is part of in_proj here, Mamba2-style fused).  Conv kernel, A_log, D and dt
+bias are not linear-layer weights and are left untouched (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def mamba2_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads
+
+
+def mamba2_params(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    d_inner, heads = mamba2_dims(cfg)
+    ng, st = cfg.ssm_groups, cfg.ssm_state
+    # fused in_proj: [z (d_inner), x (d_inner), B (ng·st), C (ng·st), dt (heads)]
+    d_in_proj = 2 * d_inner + 2 * ng * st + heads
+    conv_dim = d_inner + 2 * ng * st
+    return {
+        "in_proj": L.linear_params(ks[0], d, d_in_proj, dtype=dtype),
+        "out_proj": L.linear_params(ks[1], d_inner, d, dtype=dtype),
+        "conv_w": jax.random.normal(ks[2], (cfg.ssm_conv, conv_dim), dtype) * 0.1,
+        "A_log": jnp.zeros((heads,), dtype),
+        "D": jnp.ones((heads,), dtype),
+        "dt_bias": jnp.zeros((heads,), dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, heads = mamba2_dims(cfg)
+    ng, st = cfg.ssm_groups, cfg.ssm_state
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + ng * st, 2 * d_inner + 2 * ng * st],
+        axis=-1,
+    )
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(seq, w):
+    """Depthwise causal conv: seq (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + seq.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out
+
+
+def mamba2_forward(p, cfg, x, *, tape=None, path=()) -> Array:
+    """Full-sequence forward via associative scan.  x (B,S,d) → (B,S,d)."""
+    B, S, d = x.shape
+    d_inner, heads = mamba2_dims(cfg)
+    ng, st = cfg.ssm_groups, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+
+    zxbcdt = L.dense(p["in_proj"], x, tape, path + ("in_proj",))
+    z, xin, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"]))
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + ng * st], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32))[None, None] * dt)
+
+    xh = xin.reshape(B, S, heads, hd)
+    Bh = jnp.repeat(Bc.reshape(B, S, ng, st), heads // ng, axis=2)
+    Ch = jnp.repeat(Cc.reshape(B, S, ng, st), heads // ng, axis=2)
+    # increment u_t = dt·x ⊗ B : (B,S,H,hd,st)
+    u = (dt[..., None] * xh.astype(jnp.float32))[..., None] * Bh[..., None, :]
+
+    def combine(c1, c2):
+        a1, s1 = c1
+        a2, s2 = c2
+        return a1 * a2, a2 * s1 + s2
+
+    a_b = jnp.broadcast_to(a[..., None, None], u.shape)
+    _, states = jax.lax.associative_scan(combine, (a_b, u), axis=1)
+    y = jnp.einsum("bshdn,bshn->bshd", states, Ch.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = (y.reshape(B, S, d_inner) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return L.dense(p["out_proj"], y, tape, path + ("out_proj",))
+
+
+class MambaCache(NamedTuple):
+    ssm: Array    # (B, H, hd, st) fp32
+    conv: Array   # (B, K-1, conv_dim)
+
+
+def mamba2_cache_init(cfg, batch: int, dtype=jnp.float32) -> MambaCache:
+    d_inner, heads = mamba2_dims(cfg)
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return MambaCache(
+        ssm=jnp.zeros((batch, heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    )
+
+
+def mamba2_decode(p, cfg, x, cache: MambaCache, *, tape=None, path=()):
+    """One-token step.  x (B,1,d) → (B,1,d), O(1) state update."""
+    B = x.shape[0]
+    d_inner, heads = mamba2_dims(cfg)
+    ng, st = cfg.ssm_groups, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+
+    zxbcdt = L.dense(p["in_proj"], x, tape, path + ("in_proj",))
+    z, xin, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)              # (B,1,conv)
+    window = jnp.concatenate([cache.conv, conv_in], axis=1)        # (B,K,conv)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]))
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + ng * st], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32))[None] * dt)
+    xh = xin.reshape(B, heads, hd).astype(jnp.float32)
+    Bh = jnp.repeat(Bc.reshape(B, ng, st), heads // ng, axis=1)
+    Ch = jnp.repeat(Cc.reshape(B, ng, st), heads // ng, axis=1)
+
+    s = a[..., None, None] * cache.ssm + (dt[..., None] * xh)[..., None] * \
+        Bh.astype(jnp.float32)[:, :, None, :]
+    y = jnp.einsum("bhdn,bhn->bhd", s, Ch.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = (y.reshape(B, 1, d_inner) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = L.dense(p["out_proj"], y, tape, path + ("out_proj",))
+    return out, MambaCache(ssm=s, conv=window[:, 1:])

@@ -1,0 +1,237 @@
+"""xLSTM blocks — mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential scan) per Beck et al. 2024, arranged in the published
+7:1 mLSTM:sLSTM pattern for xlstm-1.3b.
+
+mLSTM forward uses the stabilized parallel (attention-like) form over the
+full sequence and an O(1) recurrent state (C, n, m_state) for decode —
+which is why the ssm-family arch runs the ``long_500k`` cell.
+
+Prunable linears: up/down projections, q/k/v, and gate pre-activations
+(i/f/o projections).  Per-head recurrent R matrices in sLSTM are linear
+maps too and are included.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+def mlstm_params(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    di = cfg.xlstm_proj_factor * d                       # inner width
+    return {
+        "up": L.linear_params(ks[0], d, 2 * di, dtype=dtype),   # x-branch + gate
+        "wq": L.linear_params(ks[1], di, di, dtype=dtype),
+        "wk": L.linear_params(ks[2], di, di, dtype=dtype),
+        "wv": L.linear_params(ks[3], di, di, dtype=dtype),
+        "wi": L.linear_params(ks[4], di, cfg.num_heads, dtype=dtype),
+        "wf": L.linear_params(ks[5], di, cfg.num_heads, dtype=dtype),
+        "onorm": L.rmsnorm_params(di, dtype),
+        "down": L.linear_params(ks[6], di, d, dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(p, cfg, x, tape, path):
+    B, S, _ = x.shape
+    di = cfg.xlstm_proj_factor * cfg.d_model
+    H = cfg.num_heads
+    hd = di // H
+    up = L.dense(p["up"], x, tape, path + ("up",))
+    xb, gate = jnp.split(up, 2, axis=-1)
+    xb = jax.nn.silu(xb)
+    q = L.dense(p["wq"], xb, tape, path + ("wq",)).reshape(B, S, H, hd)
+    k = L.dense(p["wk"], xb, tape, path + ("wk",)).reshape(B, S, H, hd) / jnp.sqrt(hd)
+    v = L.dense(p["wv"], xb, tape, path + ("wv",)).reshape(B, S, H, hd)
+    i_pre = L.dense(p["wi"], xb, tape, path + ("wi",))          # (B,S,H)
+    f_pre = L.dense(p["wf"], xb, tape, path + ("wf",))
+    return xb, gate, q, k, v, i_pre.astype(jnp.float32), f_pre.astype(jnp.float32)
+
+
+def mlstm_forward(p, cfg, x, *, tape=None, path=()) -> Array:
+    """Stabilized parallel mLSTM (quadratic form — fine ≤ a few k tokens;
+    decode path is O(1) so long-context cells use the recurrent form)."""
+    B, S, _ = x.shape
+    di = cfg.xlstm_proj_factor * cfg.d_model
+    xb, gate, q, k, v, i_pre, f_pre = _mlstm_qkvif(p, cfg, x, tape, path)
+
+    logf = jax.nn.log_sigmoid(f_pre)                             # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)
+    # D[t,s] = F_t − F_s + i_s  for s ≤ t
+    Dmat = F[:, :, None, :] - F[:, None, :, :] + i_pre[:, None, :, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    Dmat = jnp.where(tri[None, :, :, None], Dmat, -jnp.inf)
+    mstab = jnp.max(Dmat, axis=2, keepdims=True)                 # (B,S,1,H)
+    Dexp = jnp.exp(Dmat - mstab)                                 # (B,S,S,H)
+
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    w = scores * Dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-mstab[:, :, 0]))
+    y = jnp.einsum("btsh,bshd->bthd", w, v.astype(jnp.float32))
+    y = y / (norm[..., None] + 1e-6)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = L.rmsnorm(p["onorm"], y) * jax.nn.sigmoid(gate)
+    return L.dense(p["down"], y, tape, path + ("down",))
+
+
+class MlstmCache(NamedTuple):
+    C: Array   # (B, H, hd, hd) matrix memory fp32
+    n: Array   # (B, H, hd) normalizer
+    m: Array   # (B, H) stabilizer
+
+
+def mlstm_cache_init(cfg, batch: int) -> MlstmCache:
+    """Matrix-memory state.  ``cfg.kv_cache_dtype`` ∈ {"", "bf16", "int8"}
+    selects the storage dtype of the (B, H, hd, hd) matrix memory C and the
+    normalizer n — the dominant decode HBM stream for xLSTM (hd²·H·L per
+    sequence).  Update math stays fp32 (mlstm_decode casts); the stabilizer
+    m is always fp32."""
+    di = cfg.xlstm_proj_factor * cfg.d_model
+    H = cfg.num_heads
+    hd = di // H
+    state_dt = (jnp.bfloat16
+                if getattr(cfg, "kv_cache_dtype", "") in ("bf16", "int8")
+                else jnp.float32)
+    return MlstmCache(
+        C=jnp.zeros((batch, H, hd, hd), state_dt),
+        n=jnp.zeros((batch, H, hd), state_dt),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def mlstm_decode(p, cfg, x, cache: MlstmCache, *, tape=None, path=()):
+    B = x.shape[0]
+    di = cfg.xlstm_proj_factor * cfg.d_model
+    xb, gate, q, k, v, i_pre, f_pre = _mlstm_qkvif(p, cfg, x, tape, path)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))   # (B,H,hd)
+    i_t, f_t = i_pre[:, 0], f_pre[:, 0]                          # (B,H)
+
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + cache.m, i_t)
+    fa = jnp.exp(logf + cache.m - m_new)
+    ia = jnp.exp(i_t - m_new)
+    C = fa[..., None, None] * cache.C.astype(jnp.float32) \
+        + ia[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = fa[..., None] * cache.n.astype(jnp.float32) + ia[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    y = (num / (den[..., None] + 1e-6)).reshape(B, 1, di).astype(x.dtype)
+    y = L.rmsnorm(p["onorm"], y) * jax.nn.sigmoid(gate)
+    out = L.dense(p["down"], y, tape, path + ("down",))
+    return out, MlstmCache(C.astype(cache.C.dtype),
+                           n.astype(cache.n.dtype), m_new)
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+def slstm_params(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    p = {"onorm": L.rmsnorm_params(d, dtype)}
+    for i, g in enumerate(("wi", "wf", "wz", "wo")):
+        p[g] = L.linear_params(ks[i], d, d, dtype=dtype)
+    for i, g in enumerate(("ri", "rf", "rz", "ro")):
+        # block-diagonal per-head recurrence (H, hd, hd)
+        p[g] = {"w": jax.random.normal(ks[4 + i], (H, hd, hd), dtype) * (1.0 / hd) ** 0.5}
+    ku, kd = jax.random.split(ks[8])
+    di = cfg.xlstm_proj_factor * d
+    p["up"] = L.linear_params(ku, d, 2 * di, dtype=dtype)
+    p["down"] = L.linear_params(kd, di, d, dtype=dtype)
+    return p
+
+
+class SlstmCache(NamedTuple):
+    c: Array  # (B, H, hd) cell
+    n: Array  # (B, H, hd) normalizer
+    h: Array  # (B, H, hd) hidden
+    m: Array  # (B, H, hd) stabilizer
+
+
+def slstm_cache_init(cfg, batch: int) -> SlstmCache:
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SlstmCache(z, z, z, jnp.full((batch, H, hd), -1e30, jnp.float32))
+
+
+def _slstm_cell(p, cfg, xi, xf, xz, xo, st: SlstmCache) -> SlstmCache:
+    """One recurrence step; x* are pre-activations (B,H,hd) fp32."""
+    rec = lambda g, h: jnp.einsum("bhd,hde->bhe", h, p[g]["w"].astype(jnp.float32))
+    i_pre = xi + rec("ri", st.h)
+    f_pre = xf + rec("rf", st.h)
+    z = jnp.tanh(xz + rec("rz", st.h))
+    o = jax.nn.sigmoid(xo + rec("ro", st.h))
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + st.m, i_pre)
+    fa = jnp.exp(logf + st.m - m_new)
+    ia = jnp.exp(i_pre - m_new)
+    c = fa * st.c + ia * z
+    n = jnp.maximum(fa * st.n + ia, 1e-6)
+    h = o * (c / n)
+    return SlstmCache(c, n, h, m_new)
+
+
+def slstm_forward(p, cfg, x, *, tape=None, path=()) -> Array:
+    """Sequential scan over S (true recurrence — no parallel form exists)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    pre = {
+        g: L.dense(p[g], x, tape, path + (g,))
+        .reshape(B, S, H, hd).astype(jnp.float32)
+        for g in ("wi", "wf", "wz", "wo")
+    }
+    st0 = slstm_cache_init(cfg, B)
+
+    def step(st, t):
+        st = _slstm_cell(p, cfg, pre["wi"][:, t], pre["wf"][:, t],
+                         pre["wz"][:, t], pre["wo"][:, t], st)
+        return st, st.h
+
+    _, hs = jax.lax.scan(step, st0, jnp.arange(S))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = L.rmsnorm(p["onorm"], h)
+    up = L.dense(p["up"], h, tape, path + ("up",))
+    a, b = jnp.split(up, 2, axis=-1)
+    return L.dense(p["down"], jax.nn.gelu(a) * b, tape, path + ("down",))
+
+
+def slstm_decode(p, cfg, x, cache: SlstmCache, *, tape=None, path=()):
+    B, _, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    pre = {
+        g: L.dense(p[g], x, tape, path + (g,))
+        .reshape(B, H, hd).astype(jnp.float32)
+        for g in ("wi", "wf", "wz", "wo")
+    }
+    st = _slstm_cell(p, cfg, pre["wi"], pre["wf"], pre["wz"], pre["wo"], cache)
+    h = st.h.reshape(B, 1, d).astype(x.dtype)
+    h = L.rmsnorm(p["onorm"], h)
+    up = L.dense(p["up"], h, tape, path + ("up",))
+    a, b = jnp.split(up, 2, axis=-1)
+    return L.dense(p["down"], jax.nn.gelu(a) * b, tape, path + ("down",)), st
+
+
+def xlstm_linear_paths(p: dict, path=()) -> list[tuple]:
+    """Prunable feed-forward linears.  The per-head recurrent R matrices are
+    excluded: their inputs live inside the sequential scan (no calibration
+    tape) and they are a negligible parameter fraction (DESIGN.md §4)."""
+    out = []
+    for name in ("up", "wq", "wk", "wv", "wi", "wf", "wz", "wo", "down"):
+        if name in p:
+            out.append(path + (name, "w"))
+    return out

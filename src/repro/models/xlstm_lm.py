@@ -1,0 +1,107 @@
+"""xLSTM language model — residual stack of mLSTM blocks with sLSTM blocks
+every ``slstm_every`` layers (xLSTM[7:1] for the 1.3b config).  d_ff = 0:
+there is no separate FFN; the blocks carry their own up/down projections."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import xlstm as X
+
+Array = jax.Array
+
+
+class XlstmLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def _is_slstm(self, i: int) -> bool:
+        k = self.cfg.slstm_every
+        return bool(k) and (i + 1) % k == 0
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        keys = jax.random.split(rng, cfg.num_layers + 1)
+        params = {
+            "embed": L.embedding_params(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": L.norm_params(cfg.norm, cfg.d_model, dt),
+            "blocks": {},
+        }
+        for i in range(cfg.num_layers):
+            mk = X.slstm_params if self._is_slstm(i) else X.mlstm_params
+            params["blocks"][i] = {
+                "ln": L.norm_params(cfg.norm, cfg.d_model, dt),
+                "cell": mk(keys[1 + i], cfg, dt),
+            }
+        return params
+
+    def embed_batch(self, params, batch) -> dict:
+        h = L.embed(params["embed"], batch["tokens"])
+        return {"h": h}
+
+    def num_blocks(self) -> int:
+        return self.cfg.num_layers
+
+
+    def block_param_path(self, i: int) -> tuple:
+        return ("blocks", i)
+
+    def behavior_key(self, i: int) -> tuple:
+        return (self._is_slstm(i),)
+
+    def block(self, params, i: int, carry: dict, tape=None) -> dict:
+        blk = params["blocks"][i]
+        path = ("blocks", i, "cell")
+        hn = L.norm(blk["ln"], carry["h"])
+        fwd = X.slstm_forward if self._is_slstm(i) else X.mlstm_forward
+        return {"h": carry["h"] + fwd(blk["cell"], self.cfg, hn,
+                                      tape=tape, path=path)}
+
+    def block_linear_paths(self, params, i: int) -> list[tuple]:
+        return X.xlstm_linear_paths(params["blocks"][i]["cell"],
+                                    ("blocks", i, "cell"))
+
+    def forward(self, params, batch, tape=None) -> Array:
+        carry = self.embed_batch(params, batch)
+        for i in range(self.cfg.num_layers):
+            carry = self.block(params, i, carry, tape)
+        h = L.norm(params["final_norm"], carry["h"])
+        return L.unembed(params["embed"], h)
+
+    def loss_from_carry(self, params, carry, batch) -> Array:
+        h = L.norm(params["final_norm"], carry["h"])
+        logits = L.unembed(params["embed"], h)
+        labels = batch.get("labels")
+        if labels is None:
+            labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)),
+                             constant_values=-1)
+        return L.cross_entropy(logits, labels)
+
+    def loss(self, params, batch) -> Array:
+        carry = self.embed_batch(params, batch)
+        for i in range(self.cfg.num_layers):
+            carry = self.block(params, i, carry)
+        return self.loss_from_carry(params, carry, batch)
+
+    def init_cache(self, batch: int, max_len: int):
+        del max_len  # recurrent state is O(1) in sequence length
+        cache = {}
+        for i in range(self.cfg.num_layers):
+            cache[i] = (X.slstm_cache_init(self.cfg, batch) if self._is_slstm(i)
+                        else X.mlstm_cache_init(self.cfg, batch))
+        return cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        del pos
+        h = L.embed(params["embed"], tokens)
+        new_cache = {}
+        for i in range(self.cfg.num_layers):
+            blk = params["blocks"][i]
+            hn = L.norm(blk["ln"], h)
+            dec = X.slstm_decode if self._is_slstm(i) else X.mlstm_decode
+            out, new_cache[i] = dec(blk["cell"], self.cfg, hn, cache[i])
+            h = h + out
+        h = L.norm(params["final_norm"], h)
+        return L.unembed(params["embed"], h), new_cache

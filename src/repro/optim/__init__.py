@@ -1,0 +1,10 @@
+"""Optimizer substrate — AdamW + schedules, from scratch (no optax offline)."""
+from repro.optim.adamw import AdamW, AdamWState, clip_by_global_norm
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup
+from repro.optim.masked import sparsity_preserving
+
+__all__ = [
+    "AdamW", "AdamWState", "clip_by_global_norm",
+    "constant", "cosine_warmup", "linear_warmup",
+    "sparsity_preserving",
+]

@@ -1,0 +1,93 @@
+"""AdamW with decoupled weight decay + global-norm clipping.
+
+Pure pytree transform with the (init, update) protocol.  Moments are kept in
+fp32 regardless of the param dtype (bf16 training stability); the update is
+cast back to the param dtype at the very end.  State is a flat NamedTuple of
+pytrees so it shards exactly like the params (see dist/sharding.py) and
+checkpoints through the generic pytree checkpointer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array      # () int32
+    mu: object       # pytree like params, fp32
+    nu: object       # pytree like params, fp32
+
+
+class AdamW(NamedTuple):
+    """AdamW hyperparameters; ``lr`` is supplied per-step (schedule).
+
+    ``moment_dtype='bfloat16'`` gives 16-bit Adam (Gopher-style) — moment
+    *math* stays fp32, only the stored state is cast.  This is what lets the
+    100B+ configs fit the v5e HBM budget (EXPERIMENTS.md §Dry-run).
+    """
+
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0       # 0 disables clipping
+    moment_dtype: str = "float32"
+
+    @property
+    def _mdt(self):
+        return jnp.dtype(self.moment_dtype)
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, self._mdt), params
+        )
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=zeros,
+            nu=jax.tree.map(jnp.copy, zeros),
+        )
+
+    def update(self, grads, state: AdamWState, params, lr: Array):
+        """→ (new_params, new_state).  ``lr`` may be a traced scalar."""
+        if self.clip_norm > 0:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mdt = self._mdt
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g)
+            .astype(mdt), state.mu, g32)
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32)
+                          + (1 - b2) * jnp.square(g)).astype(mdt),
+            state.nu, g32)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, m, v):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v.astype(jnp.float32) / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            # decoupled weight decay — skip 1-D params (norms, biases)
+            if self.weight_decay > 0 and p.ndim >= 2:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """→ (clipped grads, pre-clip global norm)."""
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm

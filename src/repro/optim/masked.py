@@ -1,0 +1,74 @@
+"""Sparsity-preserving gradient transform — sparse finetuning after pruning.
+
+After Thanos prunes a model, further finetuning must not resurrect pruned
+weights.  ``sparsity_preserving`` wraps any (init, update) optimizer so that
+masked coordinates receive zero update and are re-zeroed after the step
+(guarding against weight decay / numerical drift).
+
+Masks are keyed by the same param paths the pruning driver emits
+(core/schedule.py); params without a mask pass through untouched.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import get_path
+
+
+def _mask_tree(params, masks: dict[tuple, Any]):
+    """Dense pytree of keep-multipliers (1.0 = trainable, 0.0 = pruned)."""
+
+    def build(path_prefix, tree):
+        if not isinstance(tree, dict):
+            # stacked expert leaves may have per-slice masks (path, e)
+            if path_prefix in masks:
+                return 1.0 - masks[path_prefix].astype(jnp.float32)
+            slices = {
+                p[-1]: m for p, m in masks.items()
+                if p[:-1] == path_prefix and isinstance(p[-1], int)
+            }
+            if slices:
+                keep = jnp.ones(tree.shape, jnp.float32)
+                for e, m in slices.items():
+                    keep = keep.at[e].set(1.0 - m.astype(jnp.float32))
+                return keep
+            return None
+        return {k: build(path_prefix + (k,), v) for k, v in tree.items()}
+
+    return build((), params)
+
+
+def sparsity_preserving(optimizer, masks: dict[tuple, Any]):
+    """Wrap an AdamW-like optimizer to freeze pruned coordinates."""
+
+    class Wrapped:
+        def init(self, params):
+            return optimizer.init(params)
+
+        def update(self, grads, state, params, lr):
+            keep = _mask_tree(params, masks)
+            grads = jax.tree.map(
+                lambda g, k: g if k is None else g * k.astype(g.dtype),
+                grads, keep,
+                is_leaf=lambda x: x is None or not isinstance(x, dict),
+            )
+            new_params, new_state = optimizer.update(grads, state, params, lr)
+            new_params = jax.tree.map(
+                lambda p, k: p if k is None else p * k.astype(p.dtype),
+                new_params, keep,
+                is_leaf=lambda x: x is None or not isinstance(x, dict),
+            )
+            return new_params, new_state
+
+    return Wrapped()
+
+
+def masks_by_path(params, report_masks: dict[tuple, Any]):
+    """Validate that every mask path resolves into the param tree."""
+    for path in report_masks:
+        p = path[:-1] if isinstance(path[-1], int) else path
+        get_path(params, p)  # raises KeyError if stale
+    return report_masks

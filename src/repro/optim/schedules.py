@@ -1,0 +1,38 @@
+"""Learning-rate schedules — pure functions step ↦ lr (traced-scalar safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    """Linear ramp to ``peak`` then linear decay to ``floor``."""
+
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        up = peak * s / max(warmup_steps, 1)
+        frac = (s - warmup_steps) / max(total_steps - warmup_steps, 1)
+        down = peak + (floor - peak) * jnp.clip(frac, 0.0, 1.0)
+        return jnp.where(s < warmup_steps, up, down)
+
+    return f
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    """Linear warmup then cosine decay to ``floor`` (LLaMA-style)."""
+
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        up = peak * s / max(warmup_steps, 1)
+        frac = (s - warmup_steps) / max(total_steps - warmup_steps, 1)
+        cos = floor + 0.5 * (peak - floor) * (
+            1.0 + jnp.cos(jnp.pi * jnp.clip(frac, 0.0, 1.0))
+        )
+        return jnp.where(s < warmup_steps, up, cos)
+
+    return f

@@ -1,0 +1,8 @@
+"""Serving: batched prefill/decode engine + n:m compressed decode weights."""
+from repro.serve.engine import Request, ServeConfig, ServingEngine
+from repro.serve.compressed import compress_params, decompress_params
+
+__all__ = [
+    "Request", "ServeConfig", "ServingEngine",
+    "compress_params", "decompress_params",
+]

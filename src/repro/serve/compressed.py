@@ -1,0 +1,72 @@
+"""n:m compressed parameter trees for the decode path (paper §4.8 on TPU).
+
+After ``prune_model`` with the n:m pattern, every pruned linear can be stored
+as ``NmCompressed`` (values + 4-bit-class indices).  On Ampere this feeds
+sparse tensor cores; on TPU the win is HBM traffic — decode is memory-bound,
+so streaming ~56-62% of the dense bytes moves the dominant roofline term
+directly (kernels/nm_spmm.py is the matching Pallas kernel).
+
+``compress_params`` swaps masked linears for ``NmCompressed`` leaves;
+``decompress_params`` is the inverse (and the correctness oracle).
+The serving engine consumes either representation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.schedule import get_path, set_path
+from repro.core.sparsity import NmCompressed, pack_nm, unpack_nm
+
+
+def compress_params(params, masks: dict[tuple, Any], n: int, m: int):
+    """Replace every masked (in, out) kernel with NmCompressed.
+
+    Masks are keyed by param path (core/schedule.py layout, mask 1.0 =
+    pruned, stored (in, out) like the kernel).  The paper's layout is
+    (out=c, in=b) with n:m groups along the *input* dim b, so we transpose
+    into paper layout before packing.
+    """
+    out = params
+    for path, mask in masks.items():
+        if isinstance(path[-1], int):   # stacked expert slice
+            kernel = get_path(params, path[:-1])[path[-1]]
+        else:
+            kernel = get_path(params, path)
+        w_cb = kernel.T                    # (out, in) = (c, b)
+        m_cb = mask.T
+        packed = pack_nm(w_cb, m_cb, n, m)
+        out = set_path(out, path, packed)
+    return out
+
+
+def decompress_params(params):
+    """Inverse of compress_params — NmCompressed leaves → dense kernels."""
+
+    def walk(node):
+        if isinstance(node, NmCompressed):
+            return unpack_nm(node).T       # back to (in, out)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
+def compressed_bytes(params) -> tuple[int, int]:
+    """(compressed_bytes, dense_equivalent_bytes) over NmCompressed leaves."""
+    comp = dense = 0
+
+    def walk(node):
+        nonlocal comp, dense
+        if isinstance(node, NmCompressed):
+            comp += node.values.size * node.values.dtype.itemsize
+            comp += node.indices.size  # int8; 4-bit packing would halve
+            dense += node.values.shape[0] * node.b * node.values.dtype.itemsize
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+
+    walk(params)
+    return comp, dense

@@ -1,0 +1,5 @@
+"""Training substrate: jit'd step factory + fault-tolerant trainer loop."""
+from repro.train.step import TrainState, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["TrainState", "make_train_step", "Trainer", "TrainerConfig"]

@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on 1 CPU device
+(only launch/dryrun.py sets the 512-device placeholder flag)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+
+
+def make_problem(c=32, b=64, a=128, seed=0, dtype=np.float32):
+    """(w, h, x) with a well-conditioned calibration Hessian."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(c, b)).astype(dtype)
+    # heavy-tailed feature scales — the regime the Wanda metric exists for
+    scales = rng.lognormal(0.0, 1.0, size=(b,)).astype(dtype)
+    x = (rng.normal(size=(a, b)) * scales[None, :]).astype(dtype)
+    h = 2.0 * (x.T @ x).astype(np.float32)
+    return jnp.asarray(w), jnp.asarray(h), jnp.asarray(x)
+
+
+def recon_error(w0, w1, h) -> float:
+    """‖(Ŵ−W)X‖²_F = tr(Δ (H/2) Δᵀ)."""
+    d = np.asarray(w1, np.float64) - np.asarray(w0, np.float64)
+    return float(np.einsum("ib,bk,ik->", d, 0.5 * np.asarray(h, np.float64), d))

@@ -1,0 +1,190 @@
+"""Distribution-layer tests: sharding rules, scan segment planning,
+cost-model validation vs HloCostAnalysis (single CPU device — the 512-device
+meshes are exercised by launch/dryrun.py, which is its own deliverable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ShapeCell
+from repro.configs.registry import ARCHS, concrete_batch, get_config
+from repro.dist import sharding as D
+from repro.launch.steps import (
+    _block_signature, abstract_params, make_block_runner, plan_segments,
+)
+from repro.models.model_builder import build_model
+
+
+def fake_mesh(data=4, model=4) -> Mesh:
+    """Abstract mesh over fake devices — spec computation only, no exec."""
+    devs = np.array(jax.devices() * (data * model))[: data * model]
+    return Mesh(devs.reshape(data, model), ("data", "model"))
+
+
+# ------------------------------------------------------------- spec rules
+@pytest.mark.parametrize("arch", ARCHS)
+def test_pspecs_divisibility(arch):
+    """Every sharded dim must be divisible by its mesh axes — for the FULL
+    configs on the production 16×16 axis sizes."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    a_params = abstract_params(model)
+    mesh = fake_mesh(16, 16)
+    specs = D.fsdp_pspecs(a_params, mesh)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(a_params)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for (kp, leaf), spec in zip(flat_p, flat_s):
+        for dim, part in enumerate(spec):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % size == 0, (kp, leaf.shape, spec)
+
+
+def test_row_col_parallel_rules():
+    cfg = get_config("tinyllama-1.1b")
+    model = build_model(cfg)
+    a = abstract_params(model)
+    mesh = fake_mesh(16, 16)
+    specs = D.param_pspecs(a, mesh)
+    blk = specs["blocks"][0]
+    assert blk["attn"]["wq"]["w"] == P(None, "model")      # column-parallel
+    assert blk["attn"]["wo"]["w"] == P("model", None)      # row-parallel
+    assert blk["mlp"]["down"]["w"] == P("model", None)
+    assert specs["embed"]["table"] == P("model", None)     # vocab shard
+    assert specs["final_norm"]["scale"] == P()             # replicated
+
+    fs = D.fsdp_pspecs(a, mesh)
+    assert fs["blocks"][0]["attn"]["wq"]["w"] == P("data", "model")
+
+
+def test_whisper_vocab_replicated():
+    """51865 % 16 ≠ 0 → embedding must fall back to replication, never
+    crash the partitioner."""
+    cfg = get_config("whisper-medium")
+    model = build_model(cfg)
+    specs = D.param_pspecs(abstract_params(model), fake_mesh(16, 16))
+    assert specs["embed"]["table"] == P()
+
+
+def test_cache_pspecs_flash_decoding_fallback():
+    """kv_heads=8 < model=16 → sequence-sharded cache (flash-decoding)."""
+    cfg = get_config("mistral-large-123b")
+    model = build_model(cfg)
+    a_cache = jax.eval_shape(lambda: model.init_cache(128, 32768))
+    specs = D.cache_pspecs(a_cache, fake_mesh(16, 16), 128)
+    k_spec = specs[0].k
+    assert k_spec[1] == "model" and k_spec[2] is None
+
+
+# ------------------------------------------------------- scan segmentation
+def test_plan_segments_patterns():
+    sig = lambda x: (x,)
+    # uniform
+    assert plan_segments([sig("a")] * 8) == [("scan", 0, 1, 8)]
+    # 5:1 local:global (gemma) with leftover
+    s = ([sig("l")] * 5 + [sig("g")]) * 4 + [sig("l")] * 2
+    segs = plan_segments(s)
+    assert segs[0] == ("scan", 0, 6, 4)
+    # prefix + uniform (deepseek)
+    s = [sig("d")] * 3 + [sig("m")] * 10
+    segs = plan_segments(s)
+    assert ("scan", 3, 1, 10) in segs
+    # no repetition → all unrolled
+    s = [sig(i) for i in range(5)]
+    assert plan_segments(s) == [("unroll", [0, 1, 2, 3, 4])]
+    # coverage is exact and ordered
+    s = ([sig("a"), sig("b")] * 6) + [sig("c")]
+    segs = plan_segments(s)
+    covered = []
+    for seg in segs:
+        covered.extend(seg[1] if seg[0] == "unroll" else range(
+            seg[1], seg[1] + seg[2] * seg[3]))
+    assert covered == list(range(13))
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "zamba2-7b", "deepseek-v3-671b",
+                                  "whisper-medium"])
+def test_scanned_forward_matches_loop(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    run, segs = make_block_runner(
+        model, block_fn=lambda p, c, i: model.block(p, i, c))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_batch(cfg, ShapeCell("s", 32, 2, "train"))
+    carry = model.embed_batch(params, batch)
+    ref = carry
+    for i in range(model.num_blocks()):
+        ref = model.block(params, i, ref)
+    out = run(params, carry)
+    key = "dec_h" if "dec_h" in ref else "h"
+    np.testing.assert_allclose(np.asarray(out[key], np.float32),
+                               np.asarray(ref[key], np.float32),
+                               rtol=5e-2, atol=5e-4)
+
+
+# ----------------------------------------------------------- cost model
+def test_costmodel_flops_vs_hlo():
+    """Analytic forward FLOPs vs HloCostAnalysis on an UNROLLED module
+    (1 device, no scan) — must agree within 25%."""
+    from repro.launch import costmodel as CM
+
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    model = build_model(cfg)
+    cell = ShapeCell("probe", 128, 4, "prefill")
+    batch = concrete_batch(cfg, cell)
+    a_params = abstract_params(model)
+
+    def fwd(params, b):
+        return model.forward(params, b)
+
+    compiled = jax.jit(fwd).lower(a_params, batch).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo_flops = float(cost.get("flops", 0))
+
+    act, _ = CM.linear_macs_per_token(cfg)
+    tokens = cell.global_batch * cell.seq_len
+    analytic = 2 * act * tokens + 2 * CM.attn_macs(
+        cfg, cell.global_batch, cell.seq_len, "prefill")
+    assert hlo_flops > 0
+    ratio = analytic / hlo_flops
+    assert 0.75 < ratio < 1.35, (analytic, hlo_flops)
+
+
+def test_collective_parser_trip_counts():
+    """HLO while-loop expansion: a psum inside a scan of length k must be
+    counted k times."""
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+HloModule test
+
+%cond (arg: (s32[], f32[128])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(s32[] %x, s32[] %c), direction=LT
+}
+
+%body (arg: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %v), replica_groups={}
+  ROOT %t = (s32[], f32[128]) tuple(%i, %ar)
+}
+
+ENTRY %main (p: f32[128]) -> f32[128] {
+  %w = (s32[], f32[128]) while((s32[], f32[128]) %init), condition=%cond, body=%body
+  %ag = f32[512]{0} all-gather(f32[128]{0} %p), dimensions={0}
+  ROOT %r = f32[128]{0} get-tuple-element(%w), index=1
+}
+"""
+    out = collective_bytes(hlo)
+    # all-reduce: 128×4 B ×2(ring) ×7(trips) ; all-gather 512×4 once
+    assert out["bytes"]["all-reduce"] == 128 * 4 * 2 * 7
+    assert out["bytes"]["all-gather"] == 512 * 4
+    assert out["counts"]["all-reduce"] == 7

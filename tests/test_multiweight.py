@@ -1,0 +1,109 @@
+"""Ladder rung 2 — Eq. 10 multi-weight OBS update vs a KKT oracle.
+
+Removing a *set* q₁..q_s simultaneously with optimal compensation is a
+linearly-constrained least-squares problem; the paper's closed form
+Δ̂ = −u R̂⁻¹ R (Eq. 60) and loss S (Eq. 61) must match the KKT solution, and
+the batched *padded* solver (Appendix H.1) must reproduce both for ragged
+per-row index sets.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import solver as smod
+from repro.core.hessian import dampen, inv_cholesky_upper
+from conftest import make_problem
+
+
+def kkt_multi(w_row: np.ndarray, h: np.ndarray, q: list[int]) -> np.ndarray:
+    """min ½δHδᵀ s.t. δ_q = −w_q via the full KKT system."""
+    b = w_row.shape[0]
+    s = len(q)
+    E = np.zeros((s, b))
+    E[np.arange(s), q] = 1.0
+    kkt = np.block([[h, E.T], [E, np.zeros((s, s))]])
+    rhs = np.concatenate([np.zeros(b), -w_row[q]])
+    sol = np.linalg.solve(kkt, rhs)
+    return sol[:b]
+
+
+@pytest.mark.parametrize("seed,qs", [
+    (0, [1, 5, 9]),
+    (1, [0, 2, 3, 15]),
+    (2, [7]),
+])
+def test_closed_form_matches_kkt(seed, qs):
+    w, h, _ = make_problem(c=3, b=20, a=80, seed=seed)
+    hd = np.asarray(dampen(h, 0.01), np.float64)
+    hinv = np.linalg.inv(hd)
+    wn = np.asarray(w, np.float64)
+    k = 0
+
+    R = hinv[qs, :]
+    Rhat = R[:, qs]
+    u = wn[k, qs]
+    delta_paper = -(u @ np.linalg.inv(Rhat)) @ R          # Eq. 60
+    delta_kkt = kkt_multi(wn[k], hd, qs)
+    np.testing.assert_allclose(delta_paper, delta_kkt, rtol=1e-6, atol=1e-9)
+
+    # S (Eq. 61) = ½ u R̂⁻¹ R H Rᵀ R̂⁻ᵀ uᵀ — and the simplified ½ u R̂⁻¹ uᵀ
+    lam = u @ np.linalg.inv(Rhat)
+    s_full = 0.5 * lam @ R @ hd @ R.T @ lam.T
+    s_simple = 0.5 * lam @ u
+    actual = 0.5 * delta_paper @ hd @ delta_paper
+    np.testing.assert_allclose(s_full, actual, rtol=1e-6)
+    np.testing.assert_allclose(s_simple, actual, rtol=1e-6)
+
+
+def test_batched_padded_solver_matches_perrow():
+    """Appendix H.1: ragged rows padded to r_max — identical to row-by-row."""
+    w, h, _ = make_problem(c=6, b=24, a=96, seed=4)
+    hd_j = dampen(h, 0.01)
+    u_hinv = inv_cholesky_upper(hd_j)
+    hinv = np.asarray(u_hinv.T @ u_hinv, np.float64)
+    wn = np.asarray(w, np.float64)
+
+    per_row = [[0, 3], [5], [], [1, 2, 7, 11], [4, 9], [6]]
+    r_max = 4
+    q_abs = np.zeros((6, r_max), np.int32)
+    valid = np.zeros((6, r_max), bool)
+    for i, qs in enumerate(per_row):
+        q_abs[i, : len(qs)] = qs
+        valid[i, : len(qs)] = True
+
+    w_new = smod.prune_rows_block(
+        jnp.asarray(hinv, jnp.float32), w, jnp.asarray(q_abs),
+        jnp.asarray(valid),
+    )
+    w_ref = wn.copy()
+    for i, qs in enumerate(per_row):
+        if not qs:
+            continue
+        R = hinv[qs, :]
+        u = wn[i, qs]
+        lam = np.linalg.solve(R[:, qs].T, u)
+        w_ref[i] -= lam @ R
+        w_ref[i, qs] = 0.0
+    np.testing.assert_allclose(np.asarray(w_new), w_ref, rtol=2e-3, atol=2e-4)
+
+    # padded multipliers are exactly zero (Eq. 79 property)
+    lam_b = smod.batched_multipliers(
+        jnp.asarray(hinv, jnp.float32), w, jnp.asarray(q_abs),
+        jnp.asarray(valid))
+    assert np.all(np.asarray(lam_b)[~valid] == 0.0)
+
+
+def test_row_chunking_invariance():
+    """Appendix H.2: vertical chunking must not change the update."""
+    w, h, _ = make_problem(c=8, b=32, a=64, seed=5)
+    hd = dampen(h, 0.01)
+    u_hinv = inv_cholesky_upper(hd)
+    hinv = u_hinv.T @ u_hinv
+    q_abs = jnp.tile(jnp.asarray([1, 4, 9], jnp.int32), (8, 1))
+    valid = jnp.ones((8, 3), bool)
+    full = smod.prune_rows_block(hinv, w, q_abs, valid, row_chunk=0)
+    chunked = smod.prune_rows_block(hinv, w, q_abs, valid, row_chunk=2)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=1e-6, atol=1e-7)

@@ -1,0 +1,58 @@
+"""Ladder rung 1 — Eq. 4 single-weight OBS vs brute-force least squares.
+
+Removing weight (k, q) with optimal compensation must equal the analytic
+Δ* = −W_kq/H⁻¹_qq · H⁻¹_q:, and its loss must match both S^OBS = ½W²_kq/H⁻¹_qq
+and a constrained lstsq oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hessian import dampen
+from conftest import make_problem
+
+
+def brute_force_single(w_row: np.ndarray, x: np.ndarray, q: int) -> np.ndarray:
+    """argmin ‖δX‖² s.t. δ_q = −w_q: solve free coords exactly."""
+    b = w_row.shape[0]
+    free = [j for j in range(b) if j != q]
+    # minimize ‖(δ_free X_free + δ_q X_q)‖² over δ_free
+    A = x[free, :].T                                   # (a, b-1)
+    rhs = w_row[q] * x[q, :]                           # δ_q = −w_q ⇒ +w_q X_q
+    sol, *_ = np.linalg.lstsq(A, rhs, rcond=None)
+    delta = np.zeros(b)
+    delta[free] = sol
+    delta[q] = -w_row[q]
+    return delta
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_obs_single_matches_bruteforce(seed):
+    w, h, x = make_problem(c=4, b=24, a=96, seed=seed)
+    wn, hn, xn = map(np.asarray, (w, h, x))
+    hd = np.asarray(dampen(h, 1e-9), np.float64)   # ~undamped
+    hinv = np.linalg.inv(hd)
+    k, q = 1, 7
+
+    delta_analytic = -wn[k, q] / hinv[q, q] * hinv[q, :]
+    delta_brute = brute_force_single(np.asarray(wn[k], np.float64),
+                                     np.asarray(xn.T, np.float64), q)
+    np.testing.assert_allclose(delta_analytic, delta_brute,
+                               rtol=1e-4, atol=1e-5)
+
+    # loss value S^OBS (Eq. 44) = ½ w_q² / H⁻¹_qq = actual ‖δX‖²
+    s_obs = 0.5 * wn[k, q] ** 2 / hinv[q, q]
+    actual = 0.5 * delta_analytic @ hd @ delta_analytic
+    np.testing.assert_allclose(s_obs, actual, rtol=1e-6)
+
+
+def test_obd_metric_is_wanda_squared():
+    """Eq. 5: OBD score = (|W_kq|·‖X_q‖)² — Wanda metric squared."""
+    w, h, x = make_problem(c=8, b=16, a=64, seed=3)
+    wn, xn = np.asarray(w), np.asarray(x)
+    xnorm = np.linalg.norm(xn, axis=0)                 # ‖X_q:‖ (x is (a, b))
+    obd = wn ** 2 * (xnorm ** 2)[None, :]
+    wanda = np.abs(wn) * xnorm[None, :]
+    np.testing.assert_allclose(obd, wanda ** 2, rtol=1e-5)
