@@ -25,14 +25,15 @@ def main():
     w = jnp.asarray(rng.normal(size=(c, b)), jnp.float32)
 
     # calibration Hessian accumulated in shards (per-host batches), then
-    # combined — the single-host stand-in for the cross-replica psum
-    acc = HessianAccumulator.init(b)
+    # combined — and psum'd across the data axis via the cross-replica
+    # reduction hook (identity on this degenerate 1-device mesh)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    shards = []
     for i in range(4):
         x = jnp.asarray(rng.normal(size=(512, b)), jnp.float32)
-        acc = acc.update(x)
+        shards.append(HessianAccumulator.init(b).update(x))
+    acc = HessianAccumulator.combine(*shards).all_reduce(mesh, ("data",))
     h = acc.finalize(mean=False)
-
-    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
     cfgp = PruneConfig(method="thanos", pattern="nm", n=2, m=4,
                        block_size=128)
 

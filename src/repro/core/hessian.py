@@ -80,6 +80,26 @@ class HessianAccumulator:
             jax.lax.psum(self.xtx, axis_name), jax.lax.psum(self.count, axis_name)
         )
 
+    @staticmethod
+    def combine(*accs: "HessianAccumulator") -> "HessianAccumulator":
+        """Host-level reduction: sum partial accumulators (e.g. one per
+        calibration shard) into one.  The out-of-graph twin of ``psum`` /
+        ``all_reduce``."""
+        return jax.tree.map(lambda *xs: sum(xs[1:], xs[0]), *accs)
+
+    def all_reduce(self, mesh, axes: tuple[str, ...] = ("data",)
+                   ) -> "HessianAccumulator":
+        """Cross-replica reduction hook usable *outside* pmap: reduce
+        per-replica partials (stacked on a leading axis laid out over
+        ``axes`` — see dist.prune.hessian_all_reduce for the layout
+        contract) so multi-host calibration composes with
+        dist.prune.prune_layer_sharded, which needs the summed Hessian
+        replicated.  An unstacked accumulator is already a global sum
+        and passes through unchanged."""
+        from repro.dist.prune import hessian_all_reduce
+
+        return hessian_all_reduce(self, mesh, axes)
+
     # pytree protocol -------------------------------------------------------
     def tree_flatten(self):
         return (self.xtx, self.count), None

@@ -1,0 +1,14 @@
+"""Distribution layer: sharding rules, row-parallel pruning, gradient
+compression (DESIGN.md §3).
+
+* ``sharding``    — PartitionSpec derivation for the ("data", "model")
+  production mesh: TP rules (param_pspecs), FSDP+TP (fsdp_pspecs), batch
+  and KV-cache layouts.  Divisibility-aware: any dim a mesh axis does not
+  divide falls back to replication instead of crashing the partitioner.
+* ``prune``       — ``prune_layer_sharded``: rows of W sharded over the
+  mesh, Hessian replicated, per-row block-wise Thanos/SparseGPT/Wanda/
+  magnitude solves with zero inter-row communication.
+* ``compression`` — int8 gradient compression with error feedback for the
+  cross-pod DCN all-reduce (launch/mesh.py scaling posture).
+"""
+from repro.dist import compression, prune, sharding  # noqa: F401

@@ -1,0 +1,69 @@
+"""int8 gradient compression with error feedback for the cross-pod DCN
+all-reduce (launch/mesh.py scaling posture: the ``pod`` axis crosses data
+centers once per step — 4× fewer bytes than bf16 at bounded bias).
+
+Scheme: per-leaf symmetric int8 quantization of (grad + residual), with
+the quantization error carried into the next step (1-bit-Adam-style error
+feedback).  The residual telescopes, so the *mean* dequantized stream
+converges to the true gradient signal — the contract asserted in
+tests/test_property.py::test_int8_error_feedback_contracts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ErrorFeedback:
+    """Per-leaf fp32 residual of quantization error not yet transmitted."""
+
+    residual: Any
+
+    @staticmethod
+    def init(grads: Any) -> "ErrorFeedback":
+        return ErrorFeedback(jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+    def tree_flatten(self):
+        return (self.residual,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _quantize(x: Array) -> tuple[Array, Array]:
+    """Symmetric int8: q ∈ [−127, 127], scale = max|x|/127 (scalar)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def compress_grads(grads: Any, ef: ErrorFeedback) -> tuple[Any, ErrorFeedback]:
+    """→ (payload, new_ef): payload mirrors ``grads`` with (int8 q, scale)
+    at each leaf; the new residual holds this step's quantization error."""
+    flat, treedef = jax.tree.flatten(grads)
+    res_flat = jax.tree.leaves(ef.residual)
+    payload, new_res = [], []
+    for g, r in zip(flat, res_flat):
+        c = g.astype(jnp.float32) + r
+        q, scale = _quantize(c)
+        payload.append((q, scale))
+        new_res.append(c - q.astype(jnp.float32) * scale)
+    return (jax.tree.unflatten(treedef, payload),
+            ErrorFeedback(jax.tree.unflatten(treedef, new_res)))
+
+
+def decompress_grads(payload: Any) -> Any:
+    """Dequantize a compress_grads payload back to fp32 gradients."""
+    is_pair = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and not isinstance(x[0], tuple))
+    return jax.tree.map(
+        lambda t: t[0].astype(jnp.float32) * t[1], payload, is_leaf=is_pair)

@@ -1,0 +1,198 @@
+"""PartitionSpec derivation for the ("data", "model") production mesh.
+
+Rules are *name-and-shape* driven: the param pytrees in models/ use a
+consistent vocabulary (wq/wk/wv/up/gate are column-parallel, wo/down are
+row-parallel, ``table`` is the vocab-sharded embedding, 1-D scales/biases
+stay replicated), so a path walk plus a divisibility check per dim is
+enough to lay out every architecture in the registry.
+
+Every rule is divisibility-aware: a dim whose size the assigned mesh axes
+do not divide falls back to replication (``P()``) rather than crashing the
+partitioner — Whisper's 51865-token vocab on a 16-way model axis is the
+canonical case (tests/test_distribution.py::test_whisper_vocab_replicated).
+
+Kernels are stored (in, out) — see core/api.py for the transpose convention
+vs the paper's (out, in) layout.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# path names with row-parallel kernels (shard the INPUT dim — dim 0 of the
+# (in, out) kernel); everything else 2-D defaults to column-parallel.
+_ROW_PARALLEL = frozenset({"wo", "down"})
+# 1-D / scalar leaves and these names are always replicated
+_REPLICATED = frozenset({"scale", "bias", "b", "A_log", "dt_bias"})
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Every mesh axis that is not the tensor-parallel 'model' axis.
+
+    ("data", "model") → ("data",);  ("pod", "data", "model") → ("pod",
+    "data") — the DP gradient all-reduce spans pods over DCN.
+    """
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _size(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _entry(axes):
+    """P entry for an axis group: bare name for one axis, tuple for many."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _tp(mesh: Mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def _path_names(path) -> list[str]:
+    """String key names along a tree_flatten_with_path keypath."""
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return names
+
+
+def _spec(entries) -> P:
+    """Normalize: all-None → P() (fully replicated), else P(*entries)."""
+    if all(e is None for e in entries):
+        return P()
+    return P(*entries)
+
+
+# ==========================================================================
+# parameter layouts
+# ==========================================================================
+def param_pspecs(a_params: Any, mesh: Mesh) -> Any:
+    """Tensor-parallel (weights-resident) layout: Megatron row/column rules
+    on the 'model' axis, everything else replicated."""
+    tp = _tp(mesh)
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        nn = [n for n in _path_names(path) if not n.isdigit()]
+        name = nn[-1] if nn else ""
+        if name in ("w", "b") and len(nn) >= 2:   # generic kernel/bias leaf
+            name = nn[-2]                         # → the layer name (wo, up…)
+        if name in _REPLICATED or len(shape) < 2:
+            return P()
+        if len(shape) == 2:
+            if name == "table":                       # embedding (V, d)
+                return P("model", None) if shape[0] % tp == 0 else P()
+            if name in _ROW_PARALLEL:
+                return P("model", None) if shape[0] % tp == 0 else P()
+            # column-parallel default (wq/wk/wv/up/gate/lm_head/…)
+            return P(None, "model") if shape[1] % tp == 0 else P()
+        if len(shape) == 3:
+            # stacked expert kernels (E, in, out) → expert-parallel on
+            # 'model'; conv-style (k, in, out) falls through to column
+            if shape[0] % tp == 0 and shape[0] >= tp:
+                return P("model", None, None)
+            if shape[-1] % tp == 0:
+                return P(None, None, "model")
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, a_params)
+
+
+def fsdp_pspecs(a_params: Any, mesh: Mesh) -> Any:
+    """FSDP + TP layout: the TP layout of param_pspecs with each leaf
+    additionally sharded over the data axes on its first divisible
+    still-replicated dim (ZeRO-3-style fully-sharded residency)."""
+    dp = data_axes(mesh)
+    dps = _size(mesh, dp)
+    tp_specs = param_pspecs(a_params, mesh)
+
+    def add_data(leaf, spec):
+        shape = tuple(leaf.shape)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        for dim, e in enumerate(entries):
+            if e is None and shape[dim] % dps == 0:
+                entries[dim] = _entry(dp)
+                break
+        return _spec(entries)
+
+    return jax.tree.map(add_data, a_params, tp_specs)
+
+
+# ==========================================================================
+# activation / batch / cache layouts
+# ==========================================================================
+def batch_spec(mesh: Mesh, batch: int, rank: int = 2) -> P:
+    """Batch-dim-over-data spec for a rank-``rank`` activation tensor."""
+    dp = data_axes(mesh)
+    if not dp or batch % _size(mesh, dp) != 0:
+        return P()
+    return P(_entry(dp), *([None] * (rank - 1)))
+
+
+def batch_pspecs(a_batch: Any, mesh: Mesh) -> Any:
+    """Input batch dict: leading (global-batch) dim over the data axes."""
+    return jax.tree.map(
+        lambda leaf: batch_spec(mesh, leaf.shape[0], len(leaf.shape))
+        if len(leaf.shape) >= 1 else P(),
+        a_batch,
+    )
+
+
+def cache_pspecs(a_cache: Any, mesh: Mesh, batch: int) -> Any:
+    """KV/state cache layout: batch over data; heads over 'model' when the
+    head count divides it, else sequence-sharded (flash-decoding fallback —
+    GQA serving with kv_heads < model-axis size); scalars/pos replicated.
+
+    Cache leaves are (B, L, H, Dh) KV tensors, (B, L, H) quant scales,
+    (B, L, R) MLA latents, or small per-layer state — the dim-candidate
+    order (2, then 1) shards the heads/feature dim first and the
+    sequence dim second for all of them, keeping k/v and their scales on
+    identical layouts.
+    """
+    tp = _tp(mesh)
+    dp = data_axes(mesh)
+    dps = _size(mesh, dp)
+
+    def rule(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) < 2 or shape[0] != batch:
+            return P()
+        entries: list = [None] * len(shape)
+        if dp and batch % dps == 0:
+            entries[0] = _entry(dp)
+        candidates = (2, 1) if len(shape) >= 3 else (1,)
+        for dim in candidates:
+            if dim > 0 and shape[dim] % tp == 0:
+                entries[dim] = "model"
+                break
+        return _spec(entries)
+
+    return jax.tree.map(rule, a_cache)
+
+
+# ==========================================================================
+# placement
+# ==========================================================================
+def shard_params(params: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """Place a (restored) param tree onto ``mesh`` per the derived layout.
+
+    Checkpoint restore returns logical single-device arrays; this is the
+    elastic-scaling re-shard step (the mesh/host count may differ from the
+    one that wrote the checkpoint).
+    """
+    specs = (fsdp_pspecs if fsdp else param_pspecs)(params, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        params, specs,
+    )

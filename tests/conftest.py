@@ -8,6 +8,16 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # registered here as well as in pyproject.toml so ad-hoc invocations
+    # (pytest run from another rootdir) never hit unknown-marker warnings
+    config.addinivalue_line(
+        "markers",
+        "slow: full-config / minutes-on-CPU smoke tests, excluded from "
+        'tier-1 (tier-1 default is -m "not slow"; run all with -m "")',
+    )
+
+
 @pytest.fixture(scope="session", autouse=True)
 def _x64_off():
     jax.config.update("jax_enable_x64", False)

@@ -38,6 +38,7 @@ def test_forward_shapes_and_finite(zoo, arch):
     assert bool(jnp.isfinite(logits).all())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_one_train_step(zoo, arch):
     cfg, model, params = zoo[arch]

@@ -1,0 +1,180 @@
+"""dist/ layer unit tests beyond the seed distribution suite: sharded ≡
+local parity for every method × pattern × awkward row counts, the
+replication fallback on non-divisible dims, the gradient-compression
+error-feedback contract, and the Hessian cross-replica reduction hook."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import PruneConfig, prune_layer
+from repro.core.hessian import HessianAccumulator
+from repro.dist import sharding as D
+from repro.dist.prune import prune_layer_sharded, row_partition
+
+
+def mesh_1x1() -> Mesh:
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def _problem(c, b, seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(c, b)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4 * b, b)), jnp.float32)
+    return w, 2 * x.T @ x
+
+
+# ------------------------------------------------- sharded ≡ local parity
+PATTERNS = [
+    dict(pattern="unstructured", p=0.5),
+    dict(pattern="unstructured", p=0.37),
+    dict(pattern="nm", n=2, m=4),
+    dict(pattern="nm", n=4, m=8),
+]
+
+
+@pytest.mark.parametrize("method", ["thanos", "sparsegpt", "wanda",
+                                    "magnitude"])
+@pytest.mark.parametrize("pat", PATTERNS,
+                         ids=lambda d: d.get("p") and f"p{d['p']}"
+                         or f"{d['n']}:{d['m']}")
+@pytest.mark.parametrize("c", [16, 17])          # even and odd row counts
+def test_sharded_matches_local_all_methods(method, pat, c):
+    w, h = _problem(c, 32, seed=c)
+    cfg = PruneConfig(method=method, block_size=16, **pat)
+    a = prune_layer(w, h, cfg)
+    b = prune_layer_sharded(w, h, cfg, mesh_1x1())
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+    np.testing.assert_allclose(np.asarray(a.weights), np.asarray(b.weights),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(a.loss), float(b.loss), rtol=1e-6)
+
+
+def test_sharded_magnitude_without_hessian():
+    w, _ = _problem(10, 32)
+    cfg = PruneConfig(method="magnitude", p=0.5)
+    a = prune_layer(w, None, cfg)
+    b = prune_layer_sharded(w, None, cfg, mesh_1x1())
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+def test_sharded_requires_hessian_for_data_aware():
+    w, _ = _problem(8, 32)
+    with pytest.raises(ValueError, match="Hessian required"):
+        prune_layer_sharded(w, None, PruneConfig(method="thanos", p=0.5),
+                            mesh_1x1())
+
+
+def test_row_partition_fallback_order():
+    """Row counts pick the largest dividing axis group; odd counts fall all
+    the way back to replication instead of padding."""
+    devs = np.array(jax.devices() * 8)[:8].reshape(4, 2)
+    mesh = Mesh(devs, ("data", "model"))          # 4 × 2 (spec-only)
+    assert row_partition(16, mesh) == ("data", "model")   # 8 | 16
+    assert row_partition(12, mesh) == ("data",)   # 8∤12 → larger group wins
+    assert row_partition(6, mesh) == ("model",)   # 8∤6, 4∤6, 2|6
+    assert row_partition(9, mesh) == ()           # nothing divides → replicate
+
+    mesh3 = Mesh(np.array(jax.devices() * 3)[:3].reshape(3, 1),
+                 ("data", "model"))               # tp = 1
+    assert row_partition(9, mesh3) == ("data", "model")
+    assert row_partition(7, mesh3) == ("model",)  # size-1 axis always divides
+
+
+# ------------------------------------------------- replication fallback
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_fsdp_pspecs_replication_fallback_non_divisible():
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    mesh = Mesh(devs, ("data", "model"))
+    a = {
+        "blocks": {0: {
+            "attn": {"wq": {"w": _sds(48, 96)}, "wo": {"w": _sds(96, 48)}},
+            "mlp": {"down": {"w": _sds(6, 10)}},          # nothing divides
+            "ln1": {"scale": _sds(48)},
+        }},
+        "embed": {"table": _sds(50257, 64)},               # 50257 % 4 ≠ 0
+    }
+    tp = D.param_pspecs(a, mesh)
+    blk = tp["blocks"][0]
+    assert blk["attn"]["wq"]["w"] == P(None, "model")
+    assert blk["attn"]["wo"]["w"] == P("model", None)
+    assert blk["mlp"]["down"]["w"] == P()                  # full fallback
+    assert tp["embed"]["table"] == P()                     # vocab fallback
+
+    fs = D.fsdp_pspecs(a, mesh)
+    blk = fs["blocks"][0]
+    assert blk["attn"]["wq"]["w"] == P("data", "model")
+    assert blk["mlp"]["down"]["w"] == P()                  # still nothing
+    # vocab not divisible → FSDP shards the d_model dim instead
+    assert fs["embed"]["table"] == P(None, "data")
+    assert blk["ln1"]["scale"] == P("data")
+
+
+def test_batch_pspecs_and_spec_fallback():
+    devs = np.array(jax.devices() * 16)[:16].reshape(4, 4)
+    mesh = Mesh(devs, ("data", "model"))
+    specs = D.batch_pspecs({"tokens": _sds(8, 32), "odd": _sds(3, 5)}, mesh)
+    assert specs["tokens"] == P("data", None)
+    assert specs["odd"] == P()
+    assert D.batch_spec(mesh, 8, rank=3) == P("data", None, None)
+    assert D.batch_spec(mesh, 3, rank=3) == P()
+
+
+# ------------------------------------------------- gradient compression
+def test_int8_error_feedback_mean_converges():
+    from repro.dist.compression import (
+        ErrorFeedback, compress_grads, decompress_grads,
+    )
+
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+    ef = ErrorFeedback.init(g)
+    total = jax.tree.map(lambda x: np.zeros(x.shape), g)
+    steps = 8
+    for _ in range(steps):
+        payload, ef = compress_grads(g, ef)
+        deq = decompress_grads(payload)
+        assert payload["w"][0].dtype == jnp.int8
+        total = jax.tree.map(lambda t, d: t + np.asarray(d), total, deq)
+    for k in g:
+        np.testing.assert_allclose(total[k] / steps, np.asarray(g[k]),
+                                   atol=2e-2)
+        # residual stays bounded by one quantization step
+        scale = float(jnp.max(jnp.abs(g[k]))) / 127.0
+        assert float(jnp.max(jnp.abs(ef.residual[k]))) <= 4 * scale + 1e-6
+
+
+# ------------------------------------------------- Hessian reduction hook
+def test_hessian_combine_and_all_reduce_match_monolithic():
+    rng = np.random.default_rng(1)
+    xs = [jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+          for _ in range(4)]
+
+    mono = HessianAccumulator.init(16)
+    for x in xs:
+        mono = mono.update(x)
+
+    parts = [HessianAccumulator.init(16).update(x) for x in xs]
+    combined = HessianAccumulator.combine(*parts)
+    reduced = combined.all_reduce(mesh_1x1(), ("data",))   # global → no-op
+
+    np.testing.assert_allclose(np.asarray(reduced.finalize()),
+                               np.asarray(mono.finalize()), rtol=1e-6)
+    assert float(reduced.count) == float(mono.count)
+
+    # stacked per-replica layout: leading axis must match the replica
+    # count (1 here), and the reduction sums it away
+    stacked = jax.tree.map(lambda x: x[None], parts[0])
+    out = stacked.all_reduce(mesh_1x1(), ("data",))
+    np.testing.assert_allclose(np.asarray(out.xtx),
+                               np.asarray(parts[0].xtx), rtol=1e-6)
+    bad = jax.tree.map(lambda *x: jnp.stack(x), *parts)    # 4 ≠ 1 replica
+    with pytest.raises(ValueError, match="replica axis"):
+        bad.all_reduce(mesh_1x1(), ("data",))

@@ -6,6 +6,10 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test dep: pip install '.[test]'")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PruneConfig, prune_layer

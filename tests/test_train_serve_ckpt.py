@@ -61,6 +61,7 @@ def test_checkpoint_atomic_and_retention(tmp_path):
     assert latest_step(str(tmp_path)) == 40
 
 
+@pytest.mark.slow
 def test_trainer_restart_exact(tmp_path, tiny):
     """Kill/restart reproduces the uninterrupted run exactly (counter-based
     data + checkpointed optimizer ⇒ bit-identical trajectory)."""
@@ -128,6 +129,7 @@ def test_serving_engine_greedy_parity(tiny):
     assert out == manual
 
 
+@pytest.mark.slow
 def test_serving_compressed_weights_identical(tiny):
     """n:m-compressed params serve the exact same greedy tokens as the
     dense pruned params (paper §4.8 — compression is lossless)."""
@@ -153,6 +155,7 @@ def test_serving_compressed_weights_identical(tiny):
 
 
 # --------------------------------------------------------- sparse finetune
+@pytest.mark.slow
 def test_sparse_finetune_preserves_mask(tiny):
     cfg, model = tiny
     params = model.init(jax.random.PRNGKey(0))
