@@ -1,0 +1,158 @@
+"""Tracked pruning wall-clock benchmark → BENCH_prune.json (repo root).
+
+Times warmed-up, ``block_until_ready``'d ``prune_layer`` calls across
+method × pattern × size so every PR that touches the block-loop hot path
+has a perf trajectory datapoint to be gated against.
+
+    python -m benchmarks.bench_prune --quick            # CI artifact run
+    python -m benchmarks.bench_prune                    # full grid
+    python -m benchmarks.bench_prune --baseline old.json  # embed speedups
+
+Protocol (same as ``benchmarks/common.timeit``): one untimed warm-up call
+compiles the jitted kernel and is fully ``block_until_ready``'d, then every
+timed iteration blocks on the result, so jit compile time is excluded and
+median wall seconds per call is reported.  ``--baseline`` takes a previous
+BENCH_prune.json (e.g. measured on the pre-change code with this very
+harness) and embeds per-cell speedups; the headline cell for the block-loop
+rework is thanos / unstructured / 2048×2048 / block_size=128.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if __package__ is None or __package__ == "":          # direct invocation
+    sys.path.insert(0, _ROOT)
+try:
+    import repro  # noqa: F401 — installed or on PYTHONPATH
+except ModuleNotFoundError:                           # source checkout
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+import jax
+
+from benchmarks.common import layer_problem, timeit
+from repro.core import PruneConfig, prune_layer
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+QUICK_SIZES = ((256, 256), (512, 512))
+FULL_SIZES = QUICK_SIZES + ((1024, 1024), (2048, 2048))
+
+# (pattern, config kwargs) — block_size follows the paper defaults used in
+# the rest of the repo (128 unstructured; 128 n:m keeps m | B | b for all
+# benchmarked sizes).
+PATTERNS = (
+    ("unstructured", dict(p=0.5, block_size=128)),
+    ("nm", dict(n=2, m=4, block_size=128)),
+    ("structured", dict(p=0.3, alpha=0.0)),
+)
+METHODS = ("thanos", "sparsegpt", "wanda", "magnitude")
+
+
+def cell_key(method: str, pattern: str, c: int, b: int) -> str:
+    return f"{method}/{pattern}/{c}x{b}"
+
+
+def run_grid(sizes, *, methods=METHODS, warmup: int = 1, iters: int = 3,
+             verbose: bool = True) -> list[dict]:
+    rows = []
+    for c, b in sizes:
+        w, h = layer_problem(c, b)
+        for method in methods:
+            for pattern, kw in PATTERNS:
+                cfg = PruneConfig(method=method, pattern=pattern, **kw)
+                h_arg = None if method == "magnitude" else h
+                t = timeit(lambda: prune_layer(w, h_arg, cfg),
+                           warmup=warmup, iters=iters)
+                row = {"method": method, "pattern": pattern, "c": c, "b": b,
+                       "block_size": kw.get("block_size", 0),
+                       "seconds": t, "warmup": warmup, "iters": iters}
+                rows.append(row)
+                if verbose:
+                    print(f"{cell_key(method, pattern, c, b):40s} "
+                          f"{t * 1e3:10.1f} ms", flush=True)
+    return rows
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes only (CI artifact run)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--methods", default=",".join(METHODS))
+    ap.add_argument("--out", default="",
+                    help="output path; defaults to repo-root BENCH_prune.json"
+                         " (full grid) or BENCH_prune.quick.json (--quick, so"
+                         " a quick run never clobbers the committed full-grid"
+                         " perf-gate baseline)")
+    ap.add_argument("--baseline", default="",
+                    help="previous BENCH_prune.json to compute speedups vs")
+    args = ap.parse_args()
+    if not args.out:
+        name = "BENCH_prune.quick.json" if args.quick else "BENCH_prune.json"
+        args.out = os.path.join(ROOT, name)
+
+    sizes = QUICK_SIZES if args.quick else FULL_SIZES
+    methods = tuple(args.methods.split(","))
+    rows = run_grid(sizes, methods=methods, warmup=args.warmup,
+                    iters=args.iters)
+
+    record = {
+        "meta": {
+            "git": _git_rev(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "device": str(jax.devices()[0]),
+            "device_count": jax.device_count(),
+            "quick": args.quick,
+            "protocol": "median wall s/call, warmed-up + block_until_ready",
+        },
+        "results": rows,
+    }
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        base_by_key = {cell_key(r["method"], r["pattern"], r["c"], r["b"]):
+                       r["seconds"] for r in base["results"]}
+        speedups = {}
+        for r in rows:
+            k = cell_key(r["method"], r["pattern"], r["c"], r["b"])
+            if k in base_by_key and r["seconds"] > 0:
+                speedups[k] = base_by_key[k] / r["seconds"]
+        record["baseline"] = {"meta": base.get("meta", {}),
+                              "seconds": base_by_key}
+        record["speedup_vs_baseline"] = speedups
+        head = cell_key("thanos", "unstructured", 2048, 2048)
+        if head in speedups:
+            print(f"\nheadline {head}: {speedups[head]:.2f}x "
+                  f"({base_by_key[head]:.3f}s -> "
+                  f"{next(r['seconds'] for r in rows if cell_key(r['method'], r['pattern'], r['c'], r['b']) == head):.3f}s)")
+
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
+    print(f"\nwrote {args.out} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

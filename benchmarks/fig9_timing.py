@@ -21,7 +21,13 @@ def run(quick: bool = True):
                                 ("structured", dict(p=0.3, alpha=0.0)),
                                 ("nm", dict(n=2, m=4, block_size=128))):
                 cfgp = PruneConfig(method=method, pattern=pattern, **kw)
-                t = timeit(lambda: prune_layer(w, h, cfgp), iters=2)
+                # warmup=2: the 1st call compiles, the 2nd still pays
+                # cold caches/dispatch — both must stay out of the timed
+                # window or the thanos-vs-sparsegpt CHECK below measures
+                # jit compilation instead of the algorithms.  iters=3 so
+                # the reported number is a true median.
+                t = timeit(lambda: prune_layer(w, h, cfgp), warmup=2,
+                           iters=3)
                 rows.append({"c": c, "b": b, "method": method,
                              "pattern": pattern, "seconds": t})
     emit(rows, "fig9: pruning wall time per layer (CPU; relative ordering)")

@@ -152,6 +152,39 @@ def trailing_inverse(u_hinv: Array, j: int) -> Array:
     return ut.T @ ut
 
 
+def inverse_from_upper(u_hinv: Array) -> Array:
+    """Dense ``H^{-1} = UᵀU`` — the j=0 member of the trailing-inverse family,
+    i.e. the starting state for ``block_downdate``."""
+    return u_hinv.T @ u_hinv
+
+
+def block_downdate(hinv_trail: Array, u_hinv: Array, j1: Array,
+                   block_size: int) -> Array:
+    """Advance the embedded trailing inverse by one block: O(B·b²).
+
+    ``UᵀU = Σ_j U[j,:]ᵀ U[j,:]`` and row j of the upper-triangular U is zero
+    left of the diagonal, so the (b, b) matrix that equals ``[H_{j:,j:}]^{-1}``
+    on [j:, j:] and 0 elsewhere is exactly ``Σ_{k≥j} U[k,:]ᵀ U[k,:]``.  Hence
+
+        Hinv_trail(j1+B) = Hinv_trail(j1) − U[j1:j1+B, :]ᵀ U[j1:j1+B, :]
+
+    — a rank-B downdate per block instead of a fresh (b, b) triangular
+    matmul (O(b³) total over the loop vs O(b⁴/B); verified against the
+    direct embedding in tests/test_cholesky_identity.py).  The downdate is
+    exact up to fp roundoff **outside** the active region too (entries left
+    of j1 become O(ε) instead of exact zeros), which is why the block update
+    in core/solver.py masks finished columns.
+
+    Precondition: ``j1 + block_size <= b``.  For a ragged final block the
+    slice start clamps to ``b - block_size`` and rows of U are subtracted
+    twice — the Thanos loop only ever *discards* that final state, so it
+    tolerates this; do not consume the result of a clamped downdate.
+    """
+    b = u_hinv.shape[0]
+    ub = jax.lax.dynamic_slice(u_hinv, (j1, 0), (block_size, b))
+    return hinv_trail - ub.T @ ub
+
+
 def trailing_inverse_rows(u_hinv: Array, j: int, rows: Array) -> Array:
     """Selected rows of ``[H_{j:,j:}]^{-1}`` without materializing all of it.
 

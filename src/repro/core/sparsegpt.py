@@ -47,12 +47,14 @@ def prune_unstructured(
 
     def refresh(args):
         w_cur, mask, j = args
-        in_blk = (cols >= j) & (cols < j + bs)
-        metric = (w_cur / udiag[None, :]) ** 2          # w²/d_q, d_q = U_qq²
-        metric = jnp.where(in_blk[None, :], metric, jnp.inf)
+        # top-k restricted to the (c, bs) block slice — the old full-width
+        # form masked the other columns to +inf and sorted all c·b entries
+        blk = jax.lax.dynamic_slice(w_cur, (0, j), (c, bs))
+        dblk = jax.lax.dynamic_slice(udiag, (j,), (bs,))
+        metric = (blk / dblk[None, :]) ** 2             # w²/d_q, d_q = U_qq²
         idx = jax.lax.top_k(-metric.reshape(-1), k)[1]
-        newm = jnp.zeros((c * b,), jnp.float32).at[idx].set(1.0).reshape(c, b)
-        return mask + newm
+        newm = jnp.zeros((c * bs,), jnp.float32).at[idx].set(1.0).reshape(c, bs)
+        return jax.lax.dynamic_update_slice(mask, newm, (0, j))
 
     def body(j, state):
         w_cur, mask, loss = state

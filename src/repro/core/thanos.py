@@ -9,12 +9,25 @@ full-size (c, b) arrays and embed the trailing problem with index masks:
   selects them;
 * the trailing inverse Hessian ``[H_{j1:,j1:}]^{-1}`` is materialized as a
   full-size (b, b) matrix that is exactly the trailing inverse on the
-  active block and zero elsewhere, via the Cholesky identity
-  ``[H_{j:,j:}]^{-1} = U[j:,j:]ᵀ U[j:,j:]`` with ``H^{-1} = UᵀU``
-  (see core/hessian.py) — zeroing rows/cols < j1 of U does precisely this.
+  active block and ~0 elsewhere.  It is **carried through the loop state**
+  and advanced with an O(B·b²) rank-B downdate per block
+  (``hessian.block_downdate``: Hinv(j1+B) = Hinv(j1) − U[j1:j1+B,:]ᵀU[j1:j1+B,:]
+  with H⁻¹ = UᵀU) — O(b³) total over the loop, a b/B-fold flop reduction
+  over re-embedding UᵀU from scratch every block (O(b⁴/B) total).
+
+Two more hot-path facts (see core/solver.py and core/masks.py):
+
+* each block's padded OBS systems are solved **once** (batched Cholesky);
+  the multipliers feed both the loss S = ½ λ̂·u and the weight update, and
+  the update reads only the B in-block rows of the trailing inverse
+  (``solver.prune_block``);
+* the global residual mask is selected by a k-th-value threshold
+  (``masks.rank_threshold_mask``) instead of a full argsort + scatter-rank
+  over all c·b metric entries per block — identical selection including
+  stable tie-breaks.
 
 Equivalence with the literal shrinking-matrix transcription is asserted in
-tests/test_thanos_unstructured.py against core/reference.py (NumPy oracle).
+tests/test_thanos_algorithms.py against core/reference.py (NumPy oracle).
 """
 from __future__ import annotations
 
@@ -37,26 +50,16 @@ class PruneResult(NamedTuple):
     loss: Array      # scalar — cumulative OBS loss Σ S_k (paper Eq. 61)
 
 
-def _phi_padded_abs(mask_cb: Array, r_max: int) -> tuple[Array, Array]:
-    """φ over a full-width mask: absolute column indices of ones, padded.
-
-    ``mask_cb`` is (c, b) with ones confined to ≤ r_max columns per row.
-    """
-    c, b = mask_cb.shape
-    is_one = mask_cb > 0.5
-    key = jnp.where(is_one, jnp.arange(b)[None, :], b + jnp.arange(b)[None, :])
-    order = jnp.argsort(key, axis=1)[:, :r_max]
-    counts = jnp.sum(is_one, axis=1)
-    valid = jnp.arange(r_max)[None, :] < counts[:, None]
-    return jnp.where(valid, order, 0).astype(jnp.int32), valid
-
-
 def _embedded_trailing_inverse(u_hinv: Array, j1: Array) -> Array:
     """(b, b) matrix equal to [H_{j1:,j1:}]^{-1} on [j1:, j1:], 0 elsewhere.
 
     ``u_hinv`` is the upper factor with H^{-1} = UᵀU; zeroing rows/cols < j1
     leaves exactly U[j1:, j1:] embedded, and UᵀU of that embeds the trailing
     inverse (Schur/Cholesky identity, see core/hessian.py).
+
+    O(b³) per call — kept as the reference the incremental
+    ``hessian.block_downdate`` state is verified against
+    (tests/test_cholesky_identity.py); the production loop no longer calls it.
     """
     b = u_hinv.shape[0]
     keep = jnp.arange(b) >= j1
@@ -96,6 +99,7 @@ def prune_unstructured(
     xnorm = mmod.col_norms_from_hessian(h)
     hd = hmod.dampen(h, percdamp)
     u_hinv = hmod.inv_cholesky_upper(hd)
+    hinv0 = hmod.inverse_from_upper(u_hinv)           # trailing inverse at j=0
 
     w32 = w.astype(jnp.float32)
     # dead calibration features contribute nothing; zero them (ref-impl parity)
@@ -107,7 +111,7 @@ def prune_unstructured(
     cols = jnp.arange(b)
 
     def body(jb, state):
-        w_cur, r, total_mask, loss = state
+        w_cur, r, total_mask, loss, hinv = state
         j1 = jb * B
         active = cols >= j1
         in_block = active & (cols < j1 + B)
@@ -116,26 +120,26 @@ def prune_unstructured(
         metric = mmod.wanda_metric(w_cur, xnorm)
         metric = jnp.where(active[None, :], metric, jnp.inf)
         metric = jnp.where(outlier_rows[:, None], jnp.inf, metric)
-        flat = metric.reshape(-1)
-        order = jnp.argsort(flat, stable=True)
-        ranks = jnp.zeros_like(order).at[order].set(jnp.arange(flat.shape[0]))
-        m_res = (ranks < r).reshape(c, b)
+        m_res = mmod.rank_threshold_mask(metric, r)
         m_blk = (m_res & in_block[None, :]).astype(jnp.float32)   # Eq. 70
         r = r - jnp.sum(m_blk).astype(jnp.int32)                  # line 8
 
-        q_abs, valid = _phi_padded_abs(m_blk, B)                  # line 11
-        hinv = _embedded_trailing_inverse(u_hinv, j1)             # line 17
-        loss = loss + jnp.sum(smod.obs_loss(hinv, w_cur, q_abs, valid))
-        w_cur = smod.prune_rows_block(
-            hinv, w_cur, q_abs, valid, row_chunk=row_chunk
-        )                                                          # line 15
-        return w_cur, r, total_mask + m_blk, loss
+        start = jnp.minimum(j1, b - B)        # ragged last block: clamp slice
+        m_loc = jax.lax.dynamic_slice(m_blk, (0, start), (c, B))
+        q_loc, valid = mmod.phi_padded(m_loc, B)                  # line 11
+        q_abs = q_loc + start       # padded slots land on start with λ̂ = 0
+        w_cur, dloss = smod.prune_block(                   # lines 13–15 fused
+            hinv, w_cur, q_abs, valid, j1, B, row_chunk=row_chunk
+        )
+        hinv = hmod.block_downdate(hinv, u_hinv, j1, B)           # line 17
+        return w_cur, r, total_mask + m_blk, loss + dloss, hinv
 
-    w_out, _, mask, loss = jax.lax.fori_loop(
+    w_out, _, mask, loss, _ = jax.lax.fori_loop(
         0,
         nblocks,
         body,
-        (w32, r0, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32)),
+        (w32, r0, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32),
+         hinv0),
     )
     return PruneResult(w_out.astype(w.dtype), mask, loss)
 
@@ -169,11 +173,12 @@ def prune_nm(
     xnorm = mmod.col_norms_from_hessian(h)
     hd = hmod.dampen(h, percdamp)
     u_hinv = hmod.inv_cholesky_upper(hd)
+    hinv0 = hmod.inverse_from_upper(u_hinv)
     w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
     outlier_rows = _outlier_row_mask(w32, h, alpha)
 
     def body(jb, state):
-        w_cur, total_mask, loss = state
+        w_cur, total_mask, loss, hinv = state
         j1 = jb * B
         blk = jax.lax.dynamic_slice(w_cur, (0, j1), (c, B))
         xn_blk = jax.lax.dynamic_slice(xnorm, (j1,), (B,))
@@ -183,17 +188,18 @@ def prune_nm(
         m_blk = jnp.zeros((c, b), jnp.float32)
         m_blk = jax.lax.dynamic_update_slice(m_blk, m_blk_local, (0, j1))
 
-        q_abs, valid = _phi_padded_abs(m_blk, r_max)
-        hinv = _embedded_trailing_inverse(u_hinv, j1)
-        loss = loss + jnp.sum(smod.obs_loss(hinv, w_cur, q_abs, valid))
-        w_cur = smod.prune_rows_block(
-            hinv, w_cur, q_abs, valid, row_chunk=row_chunk
+        q_loc, valid = mmod.phi_padded(m_blk_local, r_max)
+        q_abs = q_loc + j1
+        w_cur, dloss = smod.prune_block(
+            hinv, w_cur, q_abs, valid, j1, B, row_chunk=row_chunk
         )
-        return w_cur, total_mask + m_blk, loss
+        hinv = hmod.block_downdate(hinv, u_hinv, j1, B)
+        return w_cur, total_mask + m_blk, loss + dloss, hinv
 
-    w_out, mask, loss = jax.lax.fori_loop(
+    w_out, mask, loss, _ = jax.lax.fori_loop(
         0, nblocks, body,
-        (w32, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32)),
+        (w32, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32),
+         hinv0),
     )
     return PruneResult(w_out.astype(w.dtype), mask, loss)
 
@@ -240,7 +246,7 @@ def prune_structured(
     xnorm2 = jnp.clip(jnp.diagonal(h), 0.0) * 0.5            # ‖X_j‖²
     hd = hmod.dampen(h, percdamp)
     u_hinv = hmod.inv_cholesky_upper(hd)
-    hinv = u_hinv.T @ u_hinv
+    hinv = hmod.inverse_from_upper(u_hinv)
 
     w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
     outlier = _outlier_row_mask(w32, h, alpha)               # (c,) bool
@@ -250,10 +256,12 @@ def prune_structured(
     v = jnp.sum(w_no * w_no, axis=0) * xnorm2
     q = jnp.sort(jax.lax.top_k(-v, s)[1])                    # s smallest, sorted
 
-    rhat = hinv[q[:, None], q[None, :]]                      # (s, s)
+    rhat = hinv[q[:, None], q[None, :]]                      # (s, s) SPD
     r_rows = hinv[q, :]                                      # (s, b)
     u = w_no[:, q]                                           # (c, s)
-    lam = jnp.linalg.solve(rhat.T, u.T).T                    # λ̂ = u R̂⁻¹
+    lam = jax.scipy.linalg.cho_solve(                        # λ̂ = u R̂⁻¹
+        (jnp.linalg.cholesky(rhat), True), u.T
+    ).T
     delta = -(lam @ r_rows)                                  # Eq. 13
     w_new = jnp.where(outlier[:, None], w32, w32 + delta)
 

@@ -25,6 +25,13 @@ Row counts the mesh does not divide fall back to coarser partitions
 (model-only, data-only) and finally to replication — mirroring the
 divisibility contract of dist/sharding.py — rather than padding, because
 zero-padded rows would poison the unstructured budget.
+
+Perf: this wrapper adds no solve code of its own — each shard runs the
+exact single-device block loop (core/thanos.py, core/solver.py), so the
+DESIGN.md §8 complexity budget (incremental trailing-inverse downdates,
+single-solve OBS, sort-free mask selection) applies per shard verbatim.
+>1-shard parity is exercised by ``python -m repro.launch.dryrun
+--prune-parity`` on the 512-device placeholder backend.
 """
 from __future__ import annotations
 

@@ -252,6 +252,48 @@ def run_cell(arch: str, cell, mesh, mesh_name: str, chips: int) -> dict:
     }
 
 
+def run_prune_parity() -> None:
+    """>1-shard row-parallel prune parity on the placeholder backend.
+
+    n:m mask selection is row-local, so ``dist.prune.prune_layer_sharded``
+    must produce a **bit-exact** mask vs the single-device solve at any
+    shard count (DESIGN.md §3); weights agree to float-reassociation
+    tolerance and the psum'd loss to float tolerance.  The 1×1-mesh
+    degenerate case lives in tests/test_serving_optimizations.py — this
+    exercises the real thing: 256-way row sharding on the production
+    single-pod mesh over the 512-device placeholder backend.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.api import PruneConfig, prune_layer
+    from repro.dist.prune import prune_layer_sharded, row_partition
+    from repro.dist.sharding import _size
+
+    rng = np.random.default_rng(0)
+    c, b = 512, 64
+    w = jnp.asarray(rng.normal(size=(c, b)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4 * b, b)), jnp.float32)
+    h = 2 * x.T @ x
+
+    mesh = make_production_mesh(multi_pod=False)          # (16, 16)
+    shards = _size(mesh, row_partition(c, mesh))
+    assert shards > 1, f"parity run must be >1-shard, got {shards}"
+
+    cfg = PruneConfig(method="thanos", pattern="nm", n=2, m=4, block_size=32)
+    local = prune_layer(w, h, cfg)
+    sharded = prune_layer_sharded(w, h, cfg, mesh)
+
+    np.testing.assert_array_equal(np.asarray(local.mask),
+                                  np.asarray(sharded.mask))
+    np.testing.assert_allclose(np.asarray(local.weights),
+                               np.asarray(sharded.weights),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(local.loss), float(sharded.loss),
+                               rtol=1e-5)
+    print(f"PRUNE-PARITY OK shards={shards} c={c} b={b} "
+          f"pattern=2:4 mask=bit-exact")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
@@ -260,11 +302,16 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--include-skipped", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--prune-parity", action="store_true",
+                    help="run the >1-shard dist.prune parity check and exit")
     args = ap.parse_args()
 
     assert len(jax.devices()) == 512, (
         f"dry-run needs 512 placeholder devices, got {len(jax.devices())}"
     )
+    if args.prune_parity:
+        run_prune_parity()
+        return
     os.makedirs(args.out, exist_ok=True)
 
     meshes = []

@@ -267,20 +267,39 @@ class MlaCache(NamedTuple):
 
 
 class QuantMlaCache(NamedTuple):
-    """int8 latent cache with per-(B, slot) scales (c_kv is already a
-    compressed latent — int8 on top halves its HBM footprint again)."""
+    """int8 latent cache with per-(B, slot, channel-group) scales.
+
+    c_kv is already a compressed latent — int8 on top halves its HBM
+    footprint again.  Scales are per channel *group* (``MLA_INT8_GROUP``
+    channels share one scale), not per whole (B, slot) vector: the MLA
+    latent mixes channels of very different magnitude, and a single
+    per-slot scale leaves the quiet channels with ~1 bit of signal, which
+    is what broke the 1.0 max-logit bound on deepseek-v3 (ROADMAP item).
+    Scale overhead is 4/G bytes per int8 byte (G=8 → 50%), so the latent
+    cache streams 1.5 B/channel vs 2 B for bf16 and 4 B for fp32."""
 
     c_kv: Array       # (B, L, kv_lora) int8
-    c_scale: Array    # (B, L) fp32
+    c_scale: Array    # (B, L, kv_lora / G) fp32
     k_rope: Array     # (B, L, Dr) kept bf16 (tiny, phase-sensitive)
     length: Array
 
 
+MLA_INT8_GROUP = 8
+
+
+def _mla_group(dkv: int) -> int:
+    """Largest channel-group size ≤ MLA_INT8_GROUP that divides kv_lora."""
+    return next(g for g in (8, 4, 2, 1)
+                if g <= MLA_INT8_GROUP and dkv % g == 0)
+
+
 def mla_cache_init(cfg, batch: int, max_len: int, dtype=jnp.float32):
     if getattr(cfg, "kv_cache_dtype", "") == "int8":
+        g = _mla_group(cfg.kv_lora_rank)
         return QuantMlaCache(
             c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), jnp.int8),
-            c_scale=jnp.zeros((batch, max_len), jnp.float32),
+            c_scale=jnp.zeros((batch, max_len, cfg.kv_lora_rank // g),
+                              jnp.float32),
             k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
             length=jnp.zeros((), jnp.int32),
         )
@@ -307,20 +326,25 @@ def mla_decode(p, cfg, x, pos, cache: MlaCache, *, tape=None, path=()):
                   else k_rope_new)
 
     if isinstance(cache, QuantMlaCache):
-        scale = jnp.maximum(jnp.max(jnp.abs(
-            c_kv_new.astype(jnp.float32)), axis=-1), 1e-8) / 127.0
-        cq = jnp.clip(jnp.round(c_kv_new.astype(jnp.float32)
-                                / scale[..., None]), -127, 127).astype(jnp.int8)
+        ng = cache.c_scale.shape[-1]
+        g = dkv // ng
+        grouped = c_kv_new.astype(jnp.float32).reshape(B, 1, ng, g)
+        scale = jnp.maximum(jnp.max(jnp.abs(grouped), axis=-1),
+                            1e-8) / 127.0                      # (B, 1, ng)
+        cq = jnp.clip(jnp.round(grouped / scale[..., None]), -127,
+                      127).astype(jnp.int8).reshape(B, 1, dkv)
         cache = QuantMlaCache(
             c_kv=jax.lax.dynamic_update_slice(cache.c_kv, cq, (0, pos, 0)),
             c_scale=jax.lax.dynamic_update_slice(cache.c_scale, scale,
-                                                 (0, pos)),
+                                                 (0, pos, 0)),
             k_rope=jax.lax.dynamic_update_slice(cache.k_rope, k_rope_upd,
                                                 (0, pos, 0)),
             length=pos + 1,
         )
-        c_att = (cache.c_kv.astype(jnp.float32)
-                 * cache.c_scale[..., None]).astype(x.dtype)
+        L_max = cache.c_kv.shape[1]
+        c_att = (cache.c_kv.astype(jnp.float32).reshape(B, L_max, ng, g)
+                 * cache.c_scale[..., None]).reshape(B, L_max, dkv
+                                                     ).astype(x.dtype)
     else:
         cache = MlaCache(
             c_kv=jax.lax.dynamic_update_slice(cache.c_kv, c_kv_new, (0, pos, 0)),

@@ -84,6 +84,30 @@ def test_row_partition_fallback_order():
     assert row_partition(7, mesh3) == ("model",)  # size-1 axis always divides
 
 
+def test_multi_shard_nm_parity_on_placeholder_backend():
+    """ROADMAP item: >1-shard prune_layer_sharded parity for n:m, exercised
+    through launch/dryrun on the 512-device placeholder backend.  Must run
+    in a subprocess: XLA_FLAGS has to be set before the first jax import,
+    and this process already holds a 1-device backend."""
+    import os
+    import subprocess
+    import sys
+
+    import repro
+
+    # repro is a namespace package (no __init__.py) → use __path__
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)               # dryrun.py sets its own
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--prune-parity"],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "PRUNE-PARITY OK" in proc.stdout, (proc.stdout, proc.stderr[-2000:])
+
+
 # ------------------------------------------------- replication fallback
 def _sds(*shape):
     return jax.ShapeDtypeStruct(shape, jnp.float32)

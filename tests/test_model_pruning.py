@@ -29,34 +29,57 @@ def tiny():
     return cfg, model, params, batches
 
 
+@pytest.fixture(scope="module")
+def tiny_trained():
+    """Reduced tinyllama *briefly trained* on the synthetic corpus.
+
+    Quality-ordering comparisons need a model whose function is worth
+    preserving: at random init, held-out CE of the dense model is *worse*
+    than a zero-regularized one (uniform-ward pruning helps), so
+    magnitude-vs-data-aware orderings were a coin flip (the old seed
+    flake).  ~60 steps puts dense CE well below the magnitude-pruned
+    model's reachable region and the ordering becomes robust.
+    """
+    from repro.data.pipeline import SyntheticCorpus, TrainStream
+    from repro.optim import AdamW
+    from repro.train.step import make_train_step
+
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW()
+    step = make_train_step(model, opt, lambda s: 3e-3, donate=False)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
+    stream = TrainStream(corpus, global_batch=8, seq_len=64, num_hosts=1,
+                         host_id=0, seed=11)
+    state = opt.init(params)
+    for i in range(60):
+        params, state, _ = step(params, state, stream.batch_at(i))
+    batches = calibration_batches(cfg, num_samples=32, seq_len=64, batch=8)
+    return cfg, model, params, batches
+
+
 @pytest.mark.slow
-@pytest.mark.xfail(
-    strict=False,
-    reason="thanos-vs-magnitude held-out ordering is marginal on the "
-    "random-init reduced model (observed sp≈7.25 vs mg≈7.14) — known "
-    "seed quality-threshold flake, tracked in ROADMAP.md",
-)
-def test_blockwise_prune_sparsity_and_quality(tiny):
-    cfg, model, params, batches = tiny
+def test_blockwise_prune_sparsity_and_quality(tiny_trained):
+    cfg, model, params, batches = tiny_trained
     pruned, report = prune_model(
         params, ModelAdapter(model), batches,
         PruneConfig(method="thanos", p=0.5, block_size=32),
     )
     assert abs(report.mean_sparsity() - 0.5) < 0.01
-    dense = heldout_loss(model, params, cfg, num_batches=2, seq_len=64)
-    sp = heldout_loss(model, pruned, cfg, num_batches=2, seq_len=64)
+    dense = heldout_loss(model, params, cfg, num_batches=4, seq_len=64)
+    sp = heldout_loss(model, pruned, cfg, num_batches=4, seq_len=64)
     assert np.isfinite(sp)
     # magnitude at the same sparsity must be worse (data-aware wins)
     mag, _ = prune_model(
         params, ModelAdapter(model), batches,
         PruneConfig(method="magnitude", p=0.5),
     )
-    mg = heldout_loss(model, mag, cfg, num_batches=2, seq_len=64)
+    mg = heldout_loss(model, mag, cfg, num_batches=4, seq_len=64)
     assert sp < mg
-    # on a RANDOM-init model pruning-toward-zero acts as regularization
-    # toward the uniform predictor, so a small improvement over dense is
-    # legitimate; only a large 'improvement' would signal an eval bug
-    assert sp >= dense - 0.2
+    # pruning a (briefly) trained model must cost, not gain, held-out CE —
+    # a sizable 'improvement' over dense would signal an eval bug
+    assert sp >= dense - 0.05
 
 
 def test_nm_prune_then_compress_serve(tiny):

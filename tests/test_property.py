@@ -87,6 +87,25 @@ def test_psi_x_selects_r_smallest(r, seed):
         assert metric[mask > 0.5].max() <= metric[mask <= 0.5].min() + 1e-6
 
 
+@given(r=st.integers(0, 9 * 14), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_rank_threshold_mask_equals_stable_argsort(r, seed):
+    """The sort-free k-th-value selection is *bit-identical* to the stable
+    argsort it replaced — including tie-breaks by flat index and masked
+    +inf entries (the regime of the Thanos residual-mask loop)."""
+    from repro.core.masks import rank_threshold_mask
+
+    rng = np.random.default_rng(seed)
+    # coarsely quantized values force heavy ties; a few +inf masked slots
+    vals = (rng.integers(0, 6, size=(9, 14)) * 0.25).astype(np.float32)
+    vals[rng.uniform(size=vals.shape) < 0.1] = np.inf
+    got = np.asarray(rank_threshold_mask(jnp.asarray(vals), jnp.asarray(r)))
+    order = np.argsort(vals.ravel(), kind="stable")
+    ref = np.zeros(vals.size, bool)
+    ref[order[:r]] = True
+    assert np.array_equal(got.ravel(), ref)
+
+
 @given(p=st.floats(0.1, 0.7), seed=st.integers(0, 1000))
 @settings(max_examples=10, deadline=None)
 def test_update_monotonicity(p, seed):

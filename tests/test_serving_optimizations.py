@@ -25,11 +25,9 @@ def _greedy_chain(model, params, prompt, steps=6, enc=None):
 
 @pytest.mark.parametrize("arch", [
     "tinyllama-1.1b", "gemma3-1b",
-    pytest.param("deepseek-v3-671b", marks=pytest.mark.xfail(
-        strict=False,
-        reason="int8 MLA latent cache exceeds the 1.0 max-logit bound on "
-        "the reduced config (per-(B,slot) c_kv scales too coarse) — known "
-        "seed numerics issue, tracked in ROADMAP.md")),
+    # deepseek's MLA latent needs per-channel-group int8 scales (see
+    # QuantMlaCache) to stay inside the 1.0 max-logit bound
+    "deepseek-v3-671b",
     "zamba2-7b"])
 def test_int8_kv_cache_argmax_preserved(arch):
     cfg = get_config(arch, reduced=True)
