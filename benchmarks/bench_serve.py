@@ -1,0 +1,215 @@
+"""Tracked serving benchmark → BENCH_serve.json (repo root).
+
+Measures the decode hot path dense vs **compressed-resident** (the engine
+keeps NmCompressed leaves; kernels/ops.nm_matmul consumes them in-graph)
+across (model-dim, m, batch): decode tokens/s and streamed weight bytes per
+step.  A third variant re-times the compressed path through the *legacy
+one-hot* expansion (the pre-rework ref formulation, kept here as the
+baseline) so the scatter-rework speedup is a tracked number — the ratio is
+reported in DESIGN.md §9.
+
+    python -m benchmarks.bench_serve --quick            # CI artifact run
+    python -m benchmarks.bench_serve                    # full grid
+
+Protocol (same as ``benchmarks/common.timeit``): one untimed warm-up call
+compiles the jitted decode_step and is fully ``block_until_ready``'d, then
+every timed iteration blocks on the result — median wall seconds per decode
+step, compile excluded.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if __package__ is None or __package__ == "":          # direct invocation
+    sys.path.insert(0, _ROOT)
+try:
+    import repro  # noqa: F401 — installed or on PYTHONPATH
+except ModuleNotFoundError:                           # source checkout
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.configs.base import ModelConfig
+from repro.core import PruneConfig, prune_model
+from repro.core.sparsity import unpack_indices4
+from repro.data.pipeline import calibration_batches
+from repro.kernels.ops import NmKernelConfig
+from repro.models import layers as L
+from repro.models.model_builder import ModelAdapter, build_model
+from repro.serve.compressed import compress_params, compressed_bytes
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (d_model, m, batch) — quick keeps one d=128 cell: d=64 sits at the CPU
+# timing noise floor (DESIGN.md §9), so the CI artifact needs d≥128 to be
+# meaningful for the nm_ref-vs-onehot gate
+QUICK_GRID = [(64, 4, 4), (128, 4, 8)]
+FULL_GRID = [(d, m, B)
+             for d in (64, 128, 256)
+             for m in (4, 8)
+             for B in (1, 8)]
+
+
+def bench_config(d: int) -> ModelConfig:
+    return ModelConfig(
+        name=f"bench-{d}", family="dense", num_layers=2, d_model=d,
+        num_heads=4, num_kv_heads=4, head_dim=d // 4, d_ff=2 * d,
+        vocab_size=512, dtype="float32")
+
+
+def _onehot_matmul(x, values, indices, n, m, b, idx_bits=8):
+    """The pre-rework ref formulation: fp32 one-hot expansion — O(m/keep)×
+    extra FLOPs and a (c, g, keep, m) fp32 intermediate.  Benchmark-only."""
+    keep = m - n
+    c = values.shape[0]
+    g = b // m
+    if idx_bits == 4:
+        indices = unpack_indices4(indices, g * keep)
+    vals = values.reshape(c, g, keep).astype(jnp.float32)
+    idx = indices.reshape(c, g, keep).astype(jnp.int32)
+    onehot = idx[..., None] == jnp.arange(m)[None, None, None, :]
+    dense = jnp.sum(vals[..., None] * onehot, axis=2).reshape(c, b)
+    return (x.astype(jnp.float32) @ dense.T).astype(x.dtype)
+
+
+def _decode_seconds(model, params, B: int, *, nm_cfg=None, warmup=1,
+                    iters=5) -> float:
+    cache = model.init_cache(B, 64)
+    tokens = jnp.zeros((B, 1), jnp.int32)
+    step = jax.jit(model.decode_step)            # fresh jit per variant
+    with L.nm_kernel_scope(nm_cfg):
+        return timeit(lambda: step(params, cache, tokens, 8),
+                      warmup=warmup, iters=iters)
+
+
+def _param_bytes(params) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params)
+               if hasattr(l, "dtype"))
+
+
+def run_grid(grid, *, warmup=1, iters=5, verbose=True) -> list[dict]:
+    import repro.kernels.ref as ref_mod
+
+    rows = []
+    for d, m, B in grid:
+        n = m // 2
+        cfg = bench_config(d)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batches = calibration_batches(cfg, num_samples=4, seq_len=16, batch=4)
+        pruned, report = prune_model(
+            params, ModelAdapter(model), batches,
+            PruneConfig(method="magnitude", pattern="nm", n=n, m=m))
+        comp = compress_params(pruned, report.masks, n, m)
+        cbytes, dbytes = compressed_bytes(comp)
+        total_dense = _param_bytes(pruned)
+        streamed_comp = total_dense - dbytes + cbytes
+
+        t_dense = _decode_seconds(model, pruned, B, warmup=warmup,
+                                  iters=iters)
+        t_ref = _decode_seconds(model, comp, B,
+                                nm_cfg=NmKernelConfig(impl="ref"),
+                                warmup=warmup, iters=iters)
+        orig = ref_mod.nm_matmul_ref
+        ref_mod.nm_matmul_ref = _onehot_matmul
+        try:
+            t_onehot = _decode_seconds(model, comp, B,
+                                       nm_cfg=NmKernelConfig(impl="ref"),
+                                       warmup=warmup, iters=iters)
+        finally:
+            ref_mod.nm_matmul_ref = orig
+
+        for variant, t, streamed in (
+                ("dense", t_dense, total_dense),
+                ("nm_ref", t_ref, streamed_comp),
+                ("nm_onehot", t_onehot, streamed_comp)):
+            rows.append({
+                "variant": variant, "d_model": d, "n": n, "m": m, "batch": B,
+                "seconds_per_step": t, "tokens_per_s": B / t,
+                "streamed_weight_bytes": streamed,
+                "weight_bytes_ratio": streamed / total_dense,
+            })
+        if verbose:
+            print(f"d={d:4d} {n}:{m} B={B}: dense {t_dense*1e3:7.2f} ms  "
+                  f"nm_ref {t_ref*1e3:7.2f} ms  "
+                  f"nm_onehot {t_onehot*1e3:7.2f} ms  "
+                  f"(scatter vs one-hot {t_onehot / t_ref:.2f}x, "
+                  f"bytes {streamed_comp / total_dense:.3f} of dense)",
+                  flush=True)
+    return rows
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single small cell (CI artifact run)")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--out", default="",
+                    help="output path; defaults to repo-root BENCH_serve.json"
+                         " (full grid) or BENCH_serve.quick.json (--quick, so"
+                         " a quick run never clobbers the committed full-grid"
+                         " perf-gate baseline)")
+    args = ap.parse_args()
+    if not args.out:
+        name = "BENCH_serve.quick.json" if args.quick else "BENCH_serve.json"
+        args.out = os.path.join(ROOT, name)
+
+    grid = QUICK_GRID if args.quick else FULL_GRID
+    rows = run_grid(grid, warmup=args.warmup, iters=args.iters)
+
+    by_key: dict[tuple, dict] = {}
+    for r in rows:
+        by_key[(r["d_model"], r["m"], r["batch"], r["variant"])] = r
+    speedups = {}
+    for d, m, B in grid:
+        ref = by_key[(d, m, B, "nm_ref")]["seconds_per_step"]
+        oh = by_key[(d, m, B, "nm_onehot")]["seconds_per_step"]
+        speedups[f"{d}/{m}/{B}"] = oh / ref
+
+    record = {
+        "meta": {
+            "git": _git_rev(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "device": str(jax.devices()[0]),
+            "quick": args.quick,
+            "protocol": "median wall s/decode step, warmed-up + "
+                        "block_until_ready; compressed-resident via "
+                        "layers.nm_kernel_scope",
+        },
+        "results": rows,
+        "scatter_vs_onehot_speedup": speedups,
+        "scatter_vs_onehot_median": float(np.median(list(speedups.values()))),
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
+    print(f"\nwrote {args.out} ({len(rows)} rows; scatter vs one-hot median "
+          f"{record['scatter_vs_onehot_median']:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

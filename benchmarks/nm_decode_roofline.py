@@ -19,7 +19,9 @@ from repro.models.model_builder import build_model
 
 HBM_BW = 819e9
 CHIPS = 256
-IDX_OVERHEAD = {2: 0.75, 4: 0.5625}  # bf16 / fp32 per-dtype ratios (int8 idx)
+# bf16 / fp32 2:4 compressed-bytes ratios with nibble-packed 4-bit indices
+# (core/sparsity.pack_nm default; int8 indices would be 0.75 / 0.625)
+IDX_OVERHEAD = {2: 0.625, 4: 0.5625}
 
 
 def run(quick: bool = True):
@@ -40,7 +42,7 @@ def run(quick: bool = True):
         P = cost.weight_bytes
         cb = cost.detail.get("cache_bytes", 0.0)
         other = cost.hbm_bytes - P
-        ratio = IDX_OVERHEAD[2]           # bf16 weights + int8 indices
+        ratio = IDX_OVERHEAD[2]           # bf16 weights + 4-bit indices
         t_dense = cost.hbm_bytes / (CHIPS * HBM_BW)
         t_nm = (P * ratio + other) / (CHIPS * HBM_BW)
         rows.append({
@@ -49,8 +51,8 @@ def run(quick: bool = True):
             "speedup": t_dense / t_nm,
         })
     emit(rows, "nm decode roofline: modeled v5e-256 decode step, 32k cache")
-    print("# speedup ≈ 1/(1−w·(1−0.75)) where w = weight share of traffic;")
-    print("# weight-dominated archs approach 1.33×, cache-dominated ~1.0×")
+    print("# speedup ≈ 1/(1−w·(1−0.625)) where w = weight share of traffic;")
+    print("# weight-dominated archs approach 1.6×, cache-dominated ~1.0×")
     return rows
 
 

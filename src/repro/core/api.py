@@ -76,8 +76,11 @@ def prune_layer(w: Array, h: Array | None, cfg: PruneConfig) -> PruneResult:
             )
         if cfg.pattern == "nm":
             return sparsegpt.prune_nm(w, h, n=cfg.n, m=cfg.m,
+                                      blocksize=cfg.block_size,
                                       percdamp=cfg.percdamp)
-        return sparsegpt.prune_structured(w, h, p=cfg.p, percdamp=cfg.percdamp)
+        return sparsegpt.prune_structured(w, h, p=cfg.p,
+                                          blocksize=cfg.block_size,
+                                          percdamp=cfg.percdamp)
 
     if cfg.method == "wanda":
         if cfg.pattern == "unstructured":

@@ -7,7 +7,16 @@ denominator ``d_j = [H_{j:,j:}]^{-1}[0,0] = U[j,j]²``, so the per-column OBS
 update collapses to ``w[:, j:] -= ((w_j·m_j)/U[j,j]) ⊗ U[j, j:]`` — exactly
 the reference implementation's recipe.
 
-One jit compilation, ``lax.fori_loop`` over columns, full-size operands.
+The column sweep is **batched into the block-wise solve** (the same lazy
+trick as the production SparseGPT code): columns are processed in blocks of
+``bs``, the sequential per-column update touches only the (c, bs) in-block
+slice (upper-triangularity of U makes the in-block row U[j, j1:j2] all the
+update that reaches the block), the per-column errors are collected into an
+E (c, bs) panel, and the whole trailing matrix gets one
+``E @ U[j1:j2, j2:]`` matmul per block instead of ``bs`` full-width rank-1
+outer products.  Same FLOPs, but the b-iteration loop now moves (c, bs)
+operands and the wide work runs as matmuls — one jit compilation,
+``lax.fori_loop`` over blocks.
 """
 from __future__ import annotations
 
@@ -22,6 +31,64 @@ from repro.core.thanos import PruneResult
 Array = jax.Array
 
 
+def _solve_prep(w: Array, h: Array, percdamp: float):
+    hd = hmod.dampen(h, percdamp)
+    u = hmod.inv_cholesky_upper(hd)
+    udiag = jnp.diagonal(u)
+    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0,
+                    w.astype(jnp.float32))
+    return u, udiag, w32
+
+
+def _block_sweep(u: Array, bs: int, col_step):
+    """→ block(j1, w_cur, mask_blk, loss): in-block column sweep + one
+    trailing matmul.  ``col_step(jj, wb, mb, usq)`` returns the per-column
+    (mask refresh hook) mask panel; the OBS update itself is shared."""
+    b = u.shape[0]
+    cols = jnp.arange(b)
+    cols_bs = jnp.arange(bs)
+
+    def block(j1, w_cur, mb, loss):
+        c = w_cur.shape[0]
+        wb = jax.lax.dynamic_slice(w_cur, (0, j1), (c, bs))
+        usq = jax.lax.dynamic_slice(u, (j1, j1), (bs, bs))
+
+        def col(jj, st):
+            wbb, mbb, E, loss = st
+            mbb = col_step(jj, wbb, mbb)
+            urow = jax.lax.dynamic_slice(usq, (jj, 0), (1, bs))[0]
+            ujj = jnp.take(urow, jj)
+            mj = jax.lax.dynamic_slice(mbb, (0, jj), (c, 1))[:, 0]
+            wj = jax.lax.dynamic_slice(wbb, (0, jj), (c, 1))[:, 0]
+            err = wj * mj / ujj
+            loss = loss + 0.5 * jnp.sum(err**2)   # S = ½ (w/U_jj)²
+            wbb = wbb - jnp.outer(err, jnp.where(cols_bs >= jj, urow, 0.0))
+            wbb = jnp.where(
+                (cols_bs == jj)[None, :] & (mj > 0.5)[:, None], 0.0, wbb)
+            E = jax.lax.dynamic_update_slice(E, err[:, None], (0, jj))
+            return wbb, mbb, E, loss
+
+        wb, mb, E, loss = jax.lax.fori_loop(
+            0, bs, col,
+            (wb, mb, jnp.zeros((c, bs), jnp.float32), loss))
+        w_cur = jax.lax.dynamic_update_slice(w_cur, wb, (0, j1))
+        # all bs rank-1 trailing updates at once; in-block columns already
+        # final (written above), earlier columns untouched by upper-tri U
+        urows = jax.lax.dynamic_slice(u, (j1, 0), (bs, u.shape[1]))
+        tail = (cols >= j1 + bs).astype(jnp.float32)
+        w_cur = w_cur - (E @ urows) * tail[None, :]
+        return w_cur, mb, loss
+
+    return block
+
+
+def _mask_block_size(b: int, requested: int, multiple: int = 1) -> int:
+    bs = min(requested, b) if requested > 0 else b
+    if b % bs != 0 or bs % multiple != 0:
+        bs = b  # fall back to a single block (keeps shapes static)
+    return bs
+
+
 @partial(jax.jit, static_argnames=("p", "mask_blocksize", "percdamp"))
 def prune_unstructured(
     w: Array,
@@ -34,129 +101,103 @@ def prune_unstructured(
     """SparseGPT unstructured: adaptive mask per B_s-column block, p% dense
     *within each block* (Alg. 5 line 7 — local, unlike Thanos' global ψ_X)."""
     c, b = w.shape
-    bs = min(mask_blocksize, b)
-    if b % bs != 0:
-        bs = b  # fall back to a single mask block (keeps k static)
+    bs = _mask_block_size(b, mask_blocksize)
     k = int(p * c * bs)
 
-    hd = hmod.dampen(h, percdamp)
-    u = hmod.inv_cholesky_upper(hd)
-    udiag = jnp.diagonal(u)
-    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
-    cols = jnp.arange(b)
+    u, udiag, w32 = _solve_prep(w, h, percdamp)
+    sweep = _block_sweep(u, bs, lambda jj, wb, mb: mb)
 
-    def refresh(args):
-        w_cur, mask, j = args
-        # top-k restricted to the (c, bs) block slice — the old full-width
-        # form masked the other columns to +inf and sorted all c·b entries
-        blk = jax.lax.dynamic_slice(w_cur, (0, j), (c, bs))
-        dblk = jax.lax.dynamic_slice(udiag, (j,), (bs,))
-        metric = (blk / dblk[None, :]) ** 2             # w²/d_q, d_q = U_qq²
-        idx = jax.lax.top_k(-metric.reshape(-1), k)[1]
-        newm = jnp.zeros((c * bs,), jnp.float32).at[idx].set(1.0).reshape(c, bs)
-        return jax.lax.dynamic_update_slice(mask, newm, (0, j))
-
-    def body(j, state):
+    def body(bi, state):
         w_cur, mask, loss = state
-        mask = jax.lax.cond(
-            j % bs == 0, refresh, lambda a: a[1], (w_cur, mask, j)
-        )
-        urow = jax.lax.dynamic_slice(u, (j, 0), (1, b))[0]        # U[j, :]
-        ujj = jnp.take(urow, j)
-        mj = jax.lax.dynamic_slice(mask, (0, j), (c, 1))[:, 0]
-        wj = jax.lax.dynamic_slice(w_cur, (0, j), (c, 1))[:, 0]
-        err = wj * mj / ujj
-        loss = loss + 0.5 * jnp.sum(err**2)        # S = ½ w²/d = ½ (w/U_jj)²
-        w_cur = w_cur - jnp.outer(err, jnp.where(cols >= j, urow, 0.0))
-        w_cur = jnp.where((cols == j)[None, :] & (mj > 0.5)[:, None], 0.0, w_cur)
+        j1 = bi * bs
+        # mask refresh on the block at its turn (Alg. 5 line 7)
+        wb = jax.lax.dynamic_slice(w_cur, (0, j1), (c, bs))
+        db = jax.lax.dynamic_slice(udiag, (j1,), (bs,))
+        metric = (wb / db[None, :]) ** 2             # w²/d_q, d_q = U_qq²
+        idx = jax.lax.top_k(-metric.reshape(-1), k)[1]
+        mb = jnp.zeros((c * bs,), jnp.float32).at[idx].set(1.0).reshape(c, bs)
+        w_cur, mb, loss = sweep(j1, w_cur, mb, loss)
+        mask = jax.lax.dynamic_update_slice(mask, mb, (0, j1))
         return w_cur, mask, loss
 
     w_out, mask, loss = jax.lax.fori_loop(
-        0, b, body,
+        0, b // bs, body,
         (w32, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32)),
     )
     return PruneResult(w_out.astype(w.dtype), mask, loss)
 
 
-@partial(jax.jit, static_argnames=("n", "m", "percdamp"))
+@partial(jax.jit, static_argnames=("n", "m", "blocksize", "percdamp"))
 def prune_nm(
-    w: Array, h: Array, *, n: int, m: int, percdamp: float = 0.01
+    w: Array, h: Array, *, n: int, m: int, blocksize: int = 128,
+    percdamp: float = 0.01
 ) -> PruneResult:
     """SparseGPT n:m: refresh the mask per m-group, n smallest w²/d per row."""
     c, b = w.shape
     assert b % m == 0
-    hd = hmod.dampen(h, percdamp)
-    u = hmod.inv_cholesky_upper(hd)
-    udiag = jnp.diagonal(u)
-    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
-    cols = jnp.arange(b)
+    bs = _mask_block_size(b, blocksize, multiple=m)
+    u, udiag, w32 = _solve_prep(w, h, percdamp)
 
     def refresh(args):
-        w_cur, mask, j = args
-        grp_w = jax.lax.dynamic_slice(w_cur, (0, j), (c, m))
-        grp_d = jax.lax.dynamic_slice(udiag, (j,), (m,))
+        jj, wb, mb, db = args
+        grp_w = jax.lax.dynamic_slice(wb, (0, jj), (c, m))
+        grp_d = jax.lax.dynamic_slice(db, (jj,), (m,))
         metric = (grp_w / grp_d[None, :]) ** 2
         idx = jax.lax.top_k(-metric, n)[1]                        # (c, n)
         newm = jnp.zeros((c, m), jnp.float32).at[
             jnp.arange(c)[:, None], idx
         ].set(1.0)
-        return jax.lax.dynamic_update_slice(mask, newm, (0, j))
+        return jax.lax.dynamic_update_slice(mb, newm, (0, jj))
 
-    def body(j, state):
+    def body(bi, state):
         w_cur, mask, loss = state
-        mask = jax.lax.cond(
-            j % m == 0, refresh, lambda a: a[1], (w_cur, mask, j)
+        j1 = bi * bs
+        db = jax.lax.dynamic_slice(udiag, (j1,), (bs,))
+        sweep = _block_sweep(
+            u, bs,
+            lambda jj, wb, mb: jax.lax.cond(
+                jj % m == 0, refresh, lambda a: a[2], (jj, wb, mb, db)),
         )
-        urow = jax.lax.dynamic_slice(u, (j, 0), (1, b))[0]
-        ujj = jnp.take(urow, j)
-        mj = jax.lax.dynamic_slice(mask, (0, j), (c, 1))[:, 0]
-        wj = jax.lax.dynamic_slice(w_cur, (0, j), (c, 1))[:, 0]
-        err = wj * mj / ujj
-        loss = loss + 0.5 * jnp.sum(err**2)
-        w_cur = w_cur - jnp.outer(err, jnp.where(cols >= j, urow, 0.0))
-        w_cur = jnp.where((cols == j)[None, :] & (mj > 0.5)[:, None], 0.0, w_cur)
+        mb = jax.lax.dynamic_slice(mask, (0, j1), (c, bs))
+        w_cur, mb, loss = sweep(j1, w_cur, mb, loss)
+        mask = jax.lax.dynamic_update_slice(mask, mb, (0, j1))
         return w_cur, mask, loss
 
     w_out, mask, loss = jax.lax.fori_loop(
-        0, b, body,
+        0, b // bs, body,
         (w32, jnp.zeros((c, b), jnp.float32), jnp.zeros((), jnp.float32)),
     )
     return PruneResult(w_out.astype(w.dtype), mask, loss)
 
 
-@partial(jax.jit, static_argnames=("p", "percdamp"))
+@partial(jax.jit, static_argnames=("p", "blocksize", "percdamp"))
 def prune_structured(
-    w: Array, h: Array, *, p: float, percdamp: float = 0.01
+    w: Array, h: Array, *, p: float, blocksize: int = 128,
+    percdamp: float = 0.01
 ) -> PruneResult:
     """Structured (column) SparseGPT baseline used in the paper's Tab. 2:
     remove the ⌈pb⌉ columns with smallest aggregated saliency Σ_k w²/d, each
     compensated with the sequential single-column OBS rule."""
     c, b = w.shape
     s = int(-(-p * b // 1))
-    hd = hmod.dampen(h, percdamp)
-    u = hmod.inv_cholesky_upper(hd)
-    udiag = jnp.diagonal(u)
-    w32 = jnp.where(hmod.dead_features(h)[None, :], 0.0, w.astype(jnp.float32))
-    cols = jnp.arange(b)
+    bs = _mask_block_size(b, blocksize)
+    u, udiag, w32 = _solve_prep(w, h, percdamp)
 
     saliency = jnp.sum((w32 / udiag[None, :]) ** 2, axis=0)
     q = jax.lax.top_k(-saliency, s)[1]
     col_mask = jnp.zeros((b,), jnp.float32).at[q].set(1.0)
+    sweep = _block_sweep(u, bs, lambda jj, wb, mb: mb)
 
-    def body(j, state):
+    def body(bi, state):
         w_cur, loss = state
-        urow = jax.lax.dynamic_slice(u, (j, 0), (1, b))[0]
-        ujj = jnp.take(urow, j)
-        mj = jnp.take(col_mask, j)
-        wj = jax.lax.dynamic_slice(w_cur, (0, j), (c, 1))[:, 0]
-        err = wj * mj / ujj
-        loss = loss + 0.5 * jnp.sum(err**2)
-        w_cur = w_cur - jnp.outer(err, jnp.where(cols >= j, urow, 0.0))
-        w_cur = jnp.where((cols == j)[None, :] & (mj > 0.5), 0.0, w_cur)
+        j1 = bi * bs
+        mb = jnp.broadcast_to(
+            jax.lax.dynamic_slice(col_mask, (j1,), (bs,))[None, :], (c, bs))
+        w_cur, _, loss = sweep(j1, w_cur, mb, loss)
         return w_cur, loss
 
     w_out, loss = jax.lax.fori_loop(
-        0, b, body, (w32, jnp.zeros((), jnp.float32))
+        0, b // bs, body, (w32, jnp.zeros((), jnp.float32))
     )
     mask = jnp.broadcast_to(col_mask[None, :], (c, b))
     return PruneResult(w_out.astype(w.dtype), mask, loss)

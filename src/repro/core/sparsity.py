@@ -2,7 +2,8 @@
 
 On Ampere GPUs 2:4 sparsity feeds sparse tensor cores.  TPUs have no sparse
 MXU, so the transferable win is **HBM traffic**: we store only the m−n kept
-values per group plus their 4-bit in-group positions.  For 2:4 bf16 that is
+values per group plus their 4-bit in-group positions.  With two 4-bit
+positions packed per int8 byte (the default), 2:4 bf16 costs
 2×2 bytes values + 1 byte packed indices per 8 bytes dense = 62.5% of dense
 bytes (50% + index overhead); for fp32 it is 56.25%.
 
@@ -24,34 +25,77 @@ Array = jax.Array
 class NmCompressed:
     """Pytree container for n:m-compressed weights.
 
-    (n, m, b) are static aux data, so NmCompressed flows through jit /
-    eval_shape / sharding machinery with only ``values``/``indices`` traced.
+    (n, m, b, idx_bits) are static aux data, so NmCompressed flows through
+    jit / eval_shape / sharding machinery with only ``values``/``indices``
+    traced.
+
+    ``idx_bits`` selects the index storage: 8 = one in-group position per
+    int8 byte (the debugging-friendly layout); 4 = two positions per byte,
+    low nibble first (the serving layout — requires m ≤ 16).
     """
 
     values: Array    # (c, b // m * (m-n)) kept weights, group-major
-    indices: Array   # (c, b // m * (m-n)) int8 — position within the m-group
+    indices: Array   # int8 in-group positions; (c, b//m*(m-n)) for
+                     # idx_bits=8, (c, ceil(b//m*(m-n)/2)) nibble-packed
+                     # for idx_bits=4
     n: int
     m: int
     b: int           # original column count
+    idx_bits: int = 4
 
     @property
     def kept_per_group(self) -> int:
         return self.m - self.n
 
+    def unpacked_indices(self) -> Array:
+        """int8 (c, g·keep) in-group positions regardless of idx_bits."""
+        length = (self.b // self.m) * self.kept_per_group
+        if self.idx_bits == 4:
+            return unpack_indices4(self.indices, length)
+        return self.indices
+
     def tree_flatten(self):
-        return (self.values, self.indices), (self.n, self.m, self.b)
+        return (self.values, self.indices), (self.n, self.m, self.b,
+                                             self.idx_bits)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0], children[1], *aux)
 
 
-def pack_nm(w: Array, mask: Array, n: int, m: int) -> NmCompressed:
+def pack_indices4(idx: Array) -> Array:
+    """Pack int8 in-group positions (c, L), values ∈ [0, 16), two per byte.
+
+    Byte t holds entries 2t (low nibble) and 2t+1 (high nibble); an odd L is
+    zero-padded into the final high nibble.  → (c, ⌈L/2⌉) int8.
+    """
+    c, L = idx.shape
+    if L % 2:
+        idx = jnp.pad(idx, ((0, 0), (0, 1)))
+    u = idx.astype(jnp.uint8).reshape(c, -1, 2)
+    return (u[..., 0] | (u[..., 1] << 4)).astype(jnp.int8)
+
+
+def unpack_indices4(packed: Array, length: int) -> Array:
+    """Inverse of pack_indices4 — (c, ⌈L/2⌉) bytes → (c, ``length``) int8."""
+    c = packed.shape[0]
+    raw = packed.astype(jnp.int32)            # sign-extends; masked below
+    lo = raw & 0xF
+    hi = (raw >> 4) & 0xF
+    both = jnp.stack([lo, hi], axis=-1).reshape(c, -1)
+    return both[:, :length].astype(jnp.int8)
+
+
+def pack_nm(w: Array, mask: Array, n: int, m: int, *,
+            idx_bits: int = 4) -> NmCompressed:
     """Compress an n:m-masked matrix (mask 1.0 = pruned).
 
     Every m-group must contain exactly n ones in ``mask``; validated by
-    tests (core.masks.check_nm) rather than at trace time.
+    tests (core.masks.check_nm) rather than at trace time.  Kept positions
+    are stored in ascending in-group order.
     """
+    assert idx_bits in (4, 8), idx_bits
+    assert idx_bits == 8 or m <= 16, f"4-bit indices need m ≤ 16, got {m}"
     c, b = w.shape
     keep = m - n
     g = b // m
@@ -60,30 +104,35 @@ def pack_nm(w: Array, mask: Array, n: int, m: int) -> NmCompressed:
     key = jnp.where(mk, jnp.arange(m)[None, None, :], m + jnp.arange(m)[None, None, :])
     order = jnp.argsort(key, axis=-1)[..., :keep]          # (c, g, keep)
     vals = jnp.take_along_axis(w.reshape(c, g, m), order, axis=-1)
+    idx8 = order.astype(jnp.int8).reshape(c, g * keep)
     return NmCompressed(
         values=vals.reshape(c, g * keep),
-        indices=order.astype(jnp.int8).reshape(c, g * keep),
-        n=n, m=m, b=b,
+        indices=pack_indices4(idx8) if idx_bits == 4 else idx8,
+        n=n, m=m, b=b, idx_bits=idx_bits,
     )
 
 
 def unpack_nm(packed: NmCompressed) -> Array:
-    """Decompress to dense (c, b) — the pure-jnp oracle for the kernel."""
+    """Decompress to dense (c, b) — the pure-jnp oracle for the kernel.
+
+    A gather-free in-group scatter: each kept value lands at its stored
+    position, untouched positions stay zero (no fp32 one-hot contraction).
+    """
     c = packed.values.shape[0]
     keep = packed.kept_per_group
     g = packed.b // packed.m
     vals = packed.values.reshape(c, g, keep)
-    idx = packed.indices.reshape(c, g, keep).astype(jnp.int32)
+    idx = packed.unpacked_indices().reshape(c, g, keep).astype(jnp.int32)
     dense = jnp.zeros((c, g, packed.m), packed.values.dtype)
     dense = dense.at[
         jnp.arange(c)[:, None, None], jnp.arange(g)[None, :, None], idx
-    ].set(vals)
+    ].set(vals, unique_indices=True)
     return dense.reshape(c, packed.b)
 
 
 def compression_ratio(packed: NmCompressed) -> float:
     """HBM bytes(compressed) / bytes(dense) — drives the §Roofline memory term."""
     val_bytes = packed.values.size * packed.values.dtype.itemsize
-    idx_bytes = packed.indices.size  # int8 => 1 byte (4-bit packing would halve)
+    idx_bytes = packed.indices.size  # int8 bytes (4-bit packing: 2 idx/byte)
     dense_bytes = packed.values.shape[0] * packed.b * packed.values.dtype.itemsize
     return (val_bytes + idx_bytes) / dense_bytes

@@ -4,19 +4,29 @@ Paper §4.8 accelerates 2:4 sparsity with Ampere sparse tensor cores.  TPUs
 have no sparse MXU, so the transferable win is **HBM traffic** (DESIGN.md
 §3): decode is memory-bound (arithmetic intensity ≈ batch), and the weight
 stream dominates bytes.  This kernel streams the *compressed* representation
-HBM→VMEM — ``keep/m`` of the dense values plus small int8 in-group indices —
-expands each tile to dense **inside VMEM** with a one-hot contraction (VPU),
-and feeds the dense tile to the MXU.  Compute term unchanged; memory term
-scales by ≈ (keep/m + index overhead).
+HBM→VMEM — ``keep/m`` of the dense values plus nibble-packed 4-bit in-group
+indices — expands each tile to dense **inside VMEM** with an in-group
+scatter (VPU), and feeds the dense tile to the MXU.  Compute term
+unchanged; memory term scales by ≈ (keep/m + index overhead).
 
 Layout (group-major, g = b/m groups, keep = m−n kept values per group):
-    values  (c, g·keep)  same dtype as x
-    indices (c, g·keep)  int8, in-group position ∈ [0, m)
+    values  (c, g·keep)   same dtype as x
+    indices idx_bits=8 → (c, g·keep) int8, in-group position ∈ [0, m)
+            idx_bits=4 → (c, ⌈g·keep/2⌉) int8, two positions per byte
+                         (low nibble first — core/sparsity.pack_indices4)
+
+The VMEM expansion is a per-kept-slot select-accumulate: for each of the
+``keep`` static slots, values are placed where the (ct, gt, m) iota matches
+the slot's index.  Peak VMEM is one (ct, gt, m) fp32 tile — the old one-hot
+contraction materialized a (ct, gt, keep, m) fp32 tensor (keep× the VMEM)
+and spent m/keep× extra fp32 multiply-adds for the same placement.
 
 Grid: (x_tiles, c_tiles, b_tiles) — b is the contraction dim, accumulated in
 a fp32 VMEM scratch; the output tile is written once on the last b step
 (standard Pallas accumulation pattern).  Tile defaults are MXU-aligned
-(lane = 128 multiples).
+(lane = 128 multiples).  With idx_bits=4 and more than one b tile, the
+compressed tile width (block_b//m·keep) must be even so index tiles fall on
+byte boundaries — kernels/ops.choose_tiles guarantees this.
 
 Validated in interpret mode against ref.nm_matmul_ref over shape/dtype
 sweeps (tests/test_kernels.py).
@@ -34,7 +44,7 @@ Array = jax.Array
 
 
 def _nm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, m: int, keep: int,
-               nsteps: int):
+               nsteps: int, idx_bits: int):
     """One (B_tile × c_tile) output tile; contraction step j over b tiles."""
     j = pl.program_id(2)
 
@@ -43,16 +53,26 @@ def _nm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, m: int, keep: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     vals = val_ref[...]                                   # (ct, gt·keep)
-    idx = idx_ref[...].astype(jnp.int32)
     ct = vals.shape[0]
     gt = vals.shape[1] // keep
 
-    # expand compressed tile → dense (ct, gt·m) in VMEM: one-hot contraction
+    if idx_bits == 4:
+        raw = idx_ref[...].astype(jnp.int32)              # sign-extended
+        lo = raw & 0xF
+        hi = (raw >> 4) & 0xF
+        idx = jnp.stack([lo, hi], axis=-1).reshape(ct, -1)[:, :gt * keep]
+    else:
+        idx = idx_ref[...].astype(jnp.int32)
+
+    # expand compressed tile → dense (ct, gt·m) in VMEM: in-group scatter as
+    # a static loop of per-slot selects (no (ct, gt, keep, m) one-hot)
     vals3 = vals.reshape(ct, gt, keep).astype(jnp.float32)
     idx3 = idx.reshape(ct, gt, keep)
-    onehot = (idx3[..., None] == jax.lax.broadcasted_iota(
-        jnp.int32, (ct, gt, keep, m), 3)).astype(jnp.float32)
-    dense = jnp.sum(vals3[..., None] * onehot, axis=2)    # (ct, gt, m)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (ct, gt, m), 2)
+    dense = jnp.zeros((ct, gt, m), jnp.float32)
+    for k in range(keep):
+        dense = dense + jnp.where(idx3[:, :, k][..., None] == iota,
+                                  vals3[:, :, k][..., None], 0.0)
     dense = dense.reshape(ct, gt * m)                     # (ct, bt)
 
     x = x_ref[...].astype(jnp.float32)                    # (Bt, bt)
@@ -68,17 +88,18 @@ def _nm_kernel(x_ref, val_ref, idx_ref, o_ref, acc_ref, *, m: int, keep: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "m", "b", "block_b", "block_c", "block_x",
-                     "interpret"),
+    static_argnames=("n", "m", "b", "idx_bits", "block_b", "block_c",
+                     "block_x", "interpret"),
 )
 def nm_matmul(
     x: Array,          # (B, b) activations
     values: Array,     # (c, g·keep)
-    indices: Array,    # (c, g·keep) int8
+    indices: Array,    # (c, g·keep) int8, or (c, ⌈g·keep/2⌉) when idx_bits=4
     *,
     n: int,
     m: int,
     b: int,
+    idx_bits: int = 8,
     block_b: int = 512,
     block_c: int = 256,
     block_x: int = 0,
@@ -88,8 +109,11 @@ def nm_matmul(
     B = x.shape[0]
     c = values.shape[0]
     keep = m - n
-    assert b % m == 0 and values.shape[1] == (b // m) * keep, \
+    gk = (b // m) * keep
+    assert b % m == 0 and values.shape[1] == gk, \
         f"bad compressed layout: {values.shape} for b={b} {n}:{m}"
+    assert indices.shape[1] == ((gk + 1) // 2 if idx_bits == 4 else gk), \
+        f"bad index layout: {indices.shape} for idx_bits={idx_bits}"
 
     bb = min(block_b, b)
     bc = min(block_c, c)
@@ -98,16 +122,23 @@ def nm_matmul(
     assert bb % m == 0
     gb = (bb // m) * keep        # compressed width of one b tile
     nsteps = b // bb
+    if idx_bits == 4:
+        assert nsteps == 1 or gb % 2 == 0, \
+            f"4-bit index tiling needs an even per-tile width, got {gb}"
+        gi = (gb + 1) // 2       # byte width of one index tile
+    else:
+        gi = gb
 
     grid = (B // bx, c // bc, nsteps)
-    kernel = functools.partial(_nm_kernel, m=m, keep=keep, nsteps=nsteps)
+    kernel = functools.partial(_nm_kernel, m=m, keep=keep, nsteps=nsteps,
+                               idx_bits=idx_bits)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bx, bb), lambda i, k, j: (i, j)),
             pl.BlockSpec((bc, gb), lambda i, k, j: (k, j)),
-            pl.BlockSpec((bc, gb), lambda i, k, j: (k, j)),
+            pl.BlockSpec((bc, gi), lambda i, k, j: (k, j)),
         ],
         out_specs=pl.BlockSpec((bx, bc), lambda i, k, j: (i, k)),
         out_shape=jax.ShapeDtypeStruct((B, c), x.dtype),

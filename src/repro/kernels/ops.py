@@ -1,14 +1,24 @@
 """Public jit'd wrappers over the Pallas kernels, with backend dispatch.
 
-On CPU (this container) the kernels execute in interpret mode — the kernel
-body runs as traced Python, bit-faithful to the ref oracles.  On TPU the
-same calls lower through Mosaic with the declared BlockSpecs.  Callers can
-also force the pure-jnp reference (``impl='ref'``) which XLA fuses well on
-any backend — that path is what the serving engine uses by default.
+On CPU (this container) ``impl='auto'`` resolves to the pure-jnp reference —
+XLA fuses the in-group scatter + dot well, and running the Pallas kernel
+body as interpreted Python per decode step would be pure overhead.  On TPU
+``'auto'`` lowers the Pallas kernel through Mosaic with the declared
+BlockSpecs.  Callers can force either path (``impl='ref'`` / ``'pallas'``;
+'pallas' off-TPU runs in interpret mode — bit-faithful, test-only speed).
+
+``NmKernelConfig`` is the serving-side knob bundle: the engine threads it
+from ``ServeConfig`` through ``model_builder`` into ``layers.dense`` so the
+compressed matmul impl and tile sizes are chosen per deployment, not
+hardcoded at the layer.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from repro.core.sparsity import NmCompressed
 from repro.kernels import nm_spmm, hessian_accum, ref
@@ -16,26 +26,105 @@ from repro.kernels import nm_spmm, hessian_accum, ref
 Array = jax.Array
 
 
+@dataclasses.dataclass(frozen=True)
+class NmKernelConfig:
+    """How ``layers.dense`` runs an NmCompressed matmul.
+
+    impl: 'auto' (pallas on TPU, ref elsewhere) | 'ref' | 'pallas'.
+    block_b/block_c/block_x: Pallas tile overrides; 0 = shape-keyed
+    ``choose_tiles`` defaults.  Hashable/static so it can parameterize
+    jitted call sites.
+    """
+
+    impl: str = "auto"
+    block_b: int = 0
+    block_c: int = 0
+    block_x: int = 0
+
+
+@functools.cache
 def _interpret() -> bool:
+    """Backend probe, hoisted: one ``jax.default_backend()`` query per
+    process instead of one per nm_matmul/hessian_xtx call."""
     return jax.default_backend() != "tpu"
 
 
-def nm_matmul(x: Array, packed: NmCompressed, *, impl: str = "pallas",
-              **tiles) -> Array:
-    """y = x @ Wᵀ for n:m compressed W (c, b); x (..., b) → y (..., c)."""
+def _resolve_impl(impl: str) -> str:
+    if impl in ("auto", ""):
+        return "ref" if _interpret() else "pallas"
+    return impl
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def choose_tiles(B: int, c: int, b: int, m: int, keep: int,
+                 idx_bits: int = 4) -> dict:
+    """Shape-keyed Pallas tile sizes for an (B, b) × (c, b)ᵀ n:m matmul.
+
+    block_b must divide b (the compressed layout fixes b — we never pad the
+    contraction dim) and, for nibble-packed indices with >1 contraction
+    step, keep index tiles byte-aligned.  block_c/block_x only bound the
+    padding the wrapper applies, so they just round small dims up to the
+    sublane multiple.
+    """
+    bb = b
+    for cand in (512, 256, 128):
+        if cand < b and b % cand == 0 and cand % m == 0 and \
+                (idx_bits == 8 or ((cand // m) * keep) % 2 == 0):
+            bb = cand
+            break
+    bc = min(256, _round_up(c, 8))
+    bx = min(128, _round_up(max(B, 1), 8))
+    return {"block_b": bb, "block_c": bc, "block_x": bx}
+
+
+def nm_matmul(x: Array, packed: NmCompressed, *, impl: str = "",
+              cfg: NmKernelConfig | None = None, block_b: int = 0,
+              block_c: int = 0, block_x: int = 0) -> Array:
+    """y = x @ Wᵀ for n:m compressed W (c, b); x (..., b) → y (..., c).
+
+    Non-tile-divisible shapes (odd c, B not a multiple of the x tile) are
+    zero-padded for the Pallas path and sliced back — zero rows cost nothing
+    and zero activations contribute nothing.
+    """
+    cfg = cfg if cfg is not None else NmKernelConfig()
+    use = _resolve_impl(impl or cfg.impl)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if impl == "ref":
+    if use == "ref":
         y = ref.nm_matmul_ref(
-            x2, packed.values, packed.indices, packed.n, packed.m, packed.b
+            x2, packed.values, packed.indices, packed.n, packed.m, packed.b,
+            packed.idx_bits,
         )
-    else:
-        y = nm_spmm.nm_matmul(
-            x2, packed.values, packed.indices,
-            n=packed.n, m=packed.m, b=packed.b,
-            interpret=_interpret(), **tiles,
-        )
-    return y.reshape(*lead, -1)
+        return y.reshape(*lead, -1)
+
+    keep = packed.kept_per_group
+    c = packed.values.shape[0]
+    B = x2.shape[0]
+    tiles = choose_tiles(B, c, packed.b, packed.m, keep, packed.idx_bits)
+    for name, override in (("block_b", block_b or cfg.block_b),
+                           ("block_c", block_c or cfg.block_c),
+                           ("block_x", block_x or cfg.block_x)):
+        if override:
+            tiles[name] = override
+
+    c_pad = _round_up(c, tiles["block_c"]) - c
+    b_pad = _round_up(B, tiles["block_x"]) - B
+    values, indices = packed.values, packed.indices
+    if c_pad:
+        values = jnp.pad(values, ((0, c_pad), (0, 0)))
+        indices = jnp.pad(indices, ((0, c_pad), (0, 0)))
+    if b_pad:
+        x2 = jnp.pad(x2, ((0, b_pad), (0, 0)))
+
+    y = nm_spmm.nm_matmul(
+        x2, values, indices,
+        n=packed.n, m=packed.m, b=packed.b, idx_bits=packed.idx_bits,
+        interpret=_interpret(), **tiles,
+    )
+    return y[:B, :c].reshape(*lead, -1)
 
 
 def hessian_xtx(x: Array, *, impl: str = "pallas", **tiles) -> Array:

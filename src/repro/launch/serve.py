@@ -32,7 +32,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--nm", action="store_true",
-                    help="Thanos-prune 2:4 and serve compressed weights")
+                    help="Thanos-prune 2:4 and serve compressed-resident")
+    ap.add_argument("--nm-impl", default="",
+                    choices=["", "auto", "ref", "pallas"],
+                    help="compressed matmul impl (default: backend auto)")
+    ap.add_argument("--nm-block-b", type=int, default=0)
+    ap.add_argument("--nm-block-c", type=int, default=0)
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch, reduced=True)
@@ -56,7 +61,10 @@ def main():
     engine = ServingEngine(
         model, params,
         ServeConfig(batch_slots=args.slots,
-                    max_len=args.prompt_len + args.max_new + 8),
+                    max_len=args.prompt_len + args.max_new + 8,
+                    nm_impl=args.nm_impl,
+                    nm_block_b=args.nm_block_b,
+                    nm_block_c=args.nm_block_c),
     )
     rng = np.random.default_rng(0)
     for uid in range(args.requests):

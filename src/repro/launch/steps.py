@@ -351,12 +351,11 @@ def abstract_nm_params(model, n: int, m: int):
         if d_in % m:
             continue
         keep = m - n
+        gk = d_in // m * keep
         packed = NmCompressed(
-            values=jax.ShapeDtypeStruct((d_out, d_in // m * keep),
-                                        kernel.dtype),
-            indices=jax.ShapeDtypeStruct((d_out, d_in // m * keep),
-                                         jnp.int8),
-            n=n, m=m, b=d_in,
+            values=jax.ShapeDtypeStruct((d_out, gk), kernel.dtype),
+            indices=jax.ShapeDtypeStruct((d_out, (gk + 1) // 2), jnp.int8),
+            n=n, m=m, b=d_in, idx_bits=4,
         )
         a = set_path(a, path[:-1] + ("w",), packed)
     return a

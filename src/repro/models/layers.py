@@ -7,14 +7,51 @@ the layer Hessian ``2XXᵀ``.  Params are nested dicts; kernels are stored
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparsity import NmCompressed
+
 Array = jax.Array
 Tape = dict | None
 Path = tuple[Any, ...]
+
+# --------------------------------------------------------------------------
+# active n:m kernel config (compressed-resident serving)
+# --------------------------------------------------------------------------
+# ``dense()`` dispatches NmCompressed leaves through kernels/ops.nm_matmul;
+# which impl/tiles it uses is a *deployment* choice (ServeConfig →
+# model_builder → here), not a per-layer constant.  The active config is a
+# module-level slot because ``dense`` sits below ~50 call sites that thread
+# (tape, path) only; callers that care (the serving engine, benchmarks) wrap
+# their traces in ``nm_kernel_scope`` — impl/tiles are static, so whatever
+# is active at trace time is baked into that jitted computation.
+_NM_KERNEL = None
+
+
+def set_nm_kernel(cfg) -> None:
+    """Set the process-default NmKernelConfig (None = kernels/ops default)."""
+    global _NM_KERNEL
+    _NM_KERNEL = cfg
+
+
+def get_nm_kernel():
+    return _NM_KERNEL
+
+
+@contextlib.contextmanager
+def nm_kernel_scope(cfg):
+    """Temporarily activate an NmKernelConfig around a (jit-traced) region."""
+    global _NM_KERNEL
+    prev = _NM_KERNEL
+    _NM_KERNEL = cfg
+    try:
+        yield
+    finally:
+        _NM_KERNEL = prev
 
 
 # --------------------------------------------------------------------------
@@ -46,14 +83,15 @@ def dense(p: dict, x: Array, tape: Tape = None, path: Path = ()) -> Array:
     """y = x @ W (+ b).  x: (..., d_in).  Records x on the tape.
 
     If the kernel has been swapped for an ``NmCompressed`` leaf (paper §4.8
-    serving path), the matmul consumes the compressed representation — on
-    TPU through kernels/nm_spmm; here the fused one-hot expand + dot.
+    serving path), the matmul consumes the compressed representation via
+    kernels/ops.nm_matmul under the active ``NmKernelConfig`` — the Pallas
+    kernel on TPU, the fused in-group-scatter expand + dot elsewhere.
     """
     w = p["w"]
-    if type(w).__name__ == "NmCompressed":
+    if isinstance(w, NmCompressed):
         from repro.kernels import ops as kops
 
-        y = kops.nm_matmul(x, w, impl="ref")
+        y = kops.nm_matmul(x, w, cfg=_NM_KERNEL)
     else:
         if tape is not None:
             tape[path + ("w",)] = x.reshape(-1, x.shape[-1])

@@ -9,16 +9,22 @@ from repro.models.transformer import TransformerLM
 from repro.models.xlstm_lm import XlstmLM
 
 
-def build_model(cfg):
+def build_model(cfg, *, nm_kernel=None):
+    """Build the family's model; ``nm_kernel`` (an ops.NmKernelConfig)
+    selects how NmCompressed leaves are consumed — the serving engine reads
+    it off the model and activates it around its jitted prefill/decode."""
     if cfg.family in ("dense", "moe", "vlm"):
-        return TransformerLM(cfg)
-    if cfg.family == "encdec":
-        return EncDecLM(cfg)
-    if cfg.family == "hybrid":
-        return HybridLM(cfg)
-    if cfg.family == "ssm":
-        return XlstmLM(cfg)
-    raise ValueError(f"unknown family {cfg.family!r}")
+        model = TransformerLM(cfg)
+    elif cfg.family == "encdec":
+        model = EncDecLM(cfg)
+    elif cfg.family == "hybrid":
+        model = HybridLM(cfg)
+    elif cfg.family == "ssm":
+        model = XlstmLM(cfg)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    model.nm_kernel = nm_kernel
+    return model
 
 
 class ModelAdapter:

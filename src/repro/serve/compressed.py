@@ -1,14 +1,15 @@
 """n:m compressed parameter trees for the decode path (paper §4.8 on TPU).
 
 After ``prune_model`` with the n:m pattern, every pruned linear can be stored
-as ``NmCompressed`` (values + 4-bit-class indices).  On Ampere this feeds
-sparse tensor cores; on TPU the win is HBM traffic — decode is memory-bound,
-so streaming ~56-62% of the dense bytes moves the dominant roofline term
-directly (kernels/nm_spmm.py is the matching Pallas kernel).
+as ``NmCompressed`` (values + nibble-packed 4-bit indices).  On Ampere this
+feeds sparse tensor cores; on TPU the win is HBM traffic — decode is
+memory-bound, so streaming ~56-62% of the dense bytes moves the dominant
+roofline term directly (kernels/nm_spmm.py is the matching Pallas kernel).
 
-``compress_params`` swaps masked linears for ``NmCompressed`` leaves;
-``decompress_params`` is the inverse (and the correctness oracle).
-The serving engine consumes either representation.
+``compress_params`` swaps masked linears for ``NmCompressed`` leaves; the
+serving engine keeps that representation resident end-to-end.
+``decompress_params`` is the inverse — it is **not** on the serve path, it
+survives as the correctness oracle the engine is tested against.
 """
 from __future__ import annotations
 
@@ -20,7 +21,8 @@ from repro.core.schedule import get_path, set_path
 from repro.core.sparsity import NmCompressed, pack_nm, unpack_nm
 
 
-def compress_params(params, masks: dict[tuple, Any], n: int, m: int):
+def compress_params(params, masks: dict[tuple, Any], n: int, m: int, *,
+                    idx_bits: int = 4):
     """Replace every masked (in, out) kernel with NmCompressed.
 
     Masks are keyed by param path (core/schedule.py layout, mask 1.0 =
@@ -36,7 +38,7 @@ def compress_params(params, masks: dict[tuple, Any], n: int, m: int):
             kernel = get_path(params, path)
         w_cb = kernel.T                    # (out, in) = (c, b)
         m_cb = mask.T
-        packed = pack_nm(w_cb, m_cb, n, m)
+        packed = pack_nm(w_cb, m_cb, n, m, idx_bits=idx_bits)
         out = set_path(out, path, packed)
     return out
 
@@ -62,7 +64,7 @@ def compressed_bytes(params) -> tuple[int, int]:
         nonlocal comp, dense
         if isinstance(node, NmCompressed):
             comp += node.values.size * node.values.dtype.itemsize
-            comp += node.indices.size  # int8; 4-bit packing would halve
+            comp += node.indices.size  # bytes: 2 indices/byte when idx_bits=4
             dense += node.values.shape[0] * node.b * node.values.dtype.itemsize
         elif isinstance(node, dict):
             for v in node.values():

@@ -4,8 +4,11 @@ The shape discipline is TPU-grade: one jit'd ``decode_step`` with a static
 (B_slots, 1) signature runs forever; a jit'd batched prefill per bucketed
 prompt length.  Requests are served in **waves**: up to ``batch_slots``
 same-length prompts prefill together, then decode lock-step until every
-request in the wave hits its ``max_new`` (early finishers stay in their slot
-— their tokens are ignored — so the decode signature never changes).
+request in the wave is finished (its ``max_new`` reached, or ``eos_id``
+sampled when one is configured).  Early finishers stay in their slot — their
+tokens are ignored, so the decode signature never changes — and the wave
+ends at the first step where *every* slot is done rather than always
+decoding to the wave's max ``max_new``.
 
 This is static batching; true continuous batching needs per-slot positions
 in the model decode API (the cache layouts support it — engine kept simple
@@ -16,8 +19,14 @@ Fault tolerance: engine state (cache, tokens, pos) is a pytree;
 preempted server resumes mid-generation.
 
 Compressed weights: pass params whose pruned linears are ``NmCompressed``
-(serve/compressed.py) — expanded at load; the HBM savings are modeled by
-kernels/nm_spmm.py + the roofline benchmark; numerics identical to dense.
+(serve/compressed.py) — the engine keeps them **compressed-resident**: no
+``decompress_params`` at load, prefill and decode stream the compressed
+bytes through kernels/ops.nm_matmul (paper §4.8; dense is never
+materialized outside the matmul's own VMEM-tile expansion).  Which kernel
+impl/tiles run is the ``ServeConfig`` nm_* knobs (falling back to the
+``build_model(..., nm_kernel=)`` config, then backend auto-dispatch);
+numerics are identical to serving the decompressed weights —
+``decompress_params`` survives purely as the correctness oracle.
 """
 from __future__ import annotations
 
@@ -27,7 +36,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.serve.compressed import decompress_params
+from repro.kernels.ops import NmKernelConfig
+from repro.models import layers as L
 
 Array = jax.Array
 
@@ -47,17 +57,41 @@ class ServeConfig:
     max_len: int = 512
     greedy: bool = True
     temperature: float = 1.0
+    eos_id: int = -1         # < 0 = no stop token
+    # n:m compressed-matmul dispatch (kernels/ops.NmKernelConfig fields);
+    # "" / 0 defer to the model's build_model(..., nm_kernel=) config,
+    # then to backend auto-dispatch + the shape-keyed tile chooser.
+    nm_impl: str = ""
+    nm_block_b: int = 0
+    nm_block_c: int = 0
+    nm_block_x: int = 0
 
 
 class ServingEngine:
     def __init__(self, model, params, cfg: ServeConfig, *, rng=None):
         self.model = model
         self.cfg = cfg
-        self.params = decompress_params(params)
+        # compressed-resident: NmCompressed leaves stay compressed; they are
+        # pytree nodes, so they flow through jit like any other param leaf.
+        self.params = params
+        self.nm_kernel = self._resolve_nm_kernel(model, cfg)
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.queue: list[Request] = []
         self._decode = jax.jit(self._decode_fn)
         self._prefill_jits: dict[int, Any] = {}
+
+    @staticmethod
+    def _resolve_nm_kernel(model, cfg: ServeConfig) -> NmKernelConfig | None:
+        if cfg.nm_impl or cfg.nm_block_b or cfg.nm_block_c or cfg.nm_block_x:
+            base = getattr(model, "nm_kernel", None) or NmKernelConfig()
+            return dataclasses.replace(
+                base,
+                impl=cfg.nm_impl or base.impl,
+                block_b=cfg.nm_block_b or base.block_b,
+                block_c=cfg.nm_block_c or base.block_c,
+                block_x=cfg.nm_block_x or base.block_x,
+            )
+        return getattr(model, "nm_kernel", None)
 
     # ----------------------------------------------------------- step fns
     def _decode_fn(self, params, cache, tokens, pos):
@@ -105,48 +139,64 @@ class ServingEngine:
         self.queue = rest
         return wave
 
+    def _absorb(self, req: Request, token: int) -> None:
+        """Record one sampled token for ``req`` unless it already finished."""
+        if req.done or len(req.out) >= req.max_new:
+            req.done = True
+            return
+        req.out.append(token)
+        if token == self.cfg.eos_id or len(req.out) >= req.max_new:
+            req.done = True
+
     def run(self, *, max_steps: int = 100_000) -> list[Request]:
         """Drain the queue; returns finished requests in uid order."""
         finished: list[Request] = []
         steps = 0
         while self.queue and steps < max_steps:
             wave = self._next_wave()
-            S = len(wave[0].prompt)
-            B = self.cfg.batch_slots
-            prompts = jnp.zeros((B, S), jnp.int32)
-            for slot, req in enumerate(wave):
-                prompts = prompts.at[slot].set(
-                    jnp.asarray(req.prompt, jnp.int32))
-
-            fn = self._prefill_jits.get(S)
-            if fn is None:
-                fn = jax.jit(self._prefill_fn)
-                self._prefill_jits[S] = fn
-            cache = self.model.init_cache(B, self.cfg.max_len)
-            cache, last = fn(self.params, cache, prompts)
-
-            tokens = self._select(last)[:, None]               # (B, 1)
-            for slot, req in enumerate(wave):
-                req.out.append(int(tokens[slot, 0]))
-
-            horizon = min(
-                max(r.max_new for r in wave) - 1,
-                self.cfg.max_len - S - 1,
-            )
-            for t in range(horizon):
-                logits, cache = self._decode(
-                    self.params, cache, tokens, S + t)
-                nxt = self._select(logits)
-                tokens = nxt[:, None]
-                for slot, req in enumerate(wave):
-                    if len(req.out) < req.max_new:
-                        req.out.append(int(nxt[slot]))
-                steps += 1
-
+            with L.nm_kernel_scope(self.nm_kernel):
+                steps += self._serve_wave(wave)
             for req in wave:
                 req.done = True
                 finished.append(req)
         return sorted(finished, key=lambda r: r.uid)
+
+    def _serve_wave(self, wave: list[Request]) -> int:
+        """Prefill + decode one wave; returns decode steps executed."""
+        S = len(wave[0].prompt)
+        B = self.cfg.batch_slots
+        prompts = jnp.zeros((B, S), jnp.int32)
+        for slot, req in enumerate(wave):
+            prompts = prompts.at[slot].set(
+                jnp.asarray(req.prompt, jnp.int32))
+
+        fn = self._prefill_jits.get(S)
+        if fn is None:
+            fn = jax.jit(self._prefill_fn)
+            self._prefill_jits[S] = fn
+        cache = self.model.init_cache(B, self.cfg.max_len)
+        cache, last = fn(self.params, cache, prompts)
+
+        tokens = self._select(last)[:, None]               # (B, 1)
+        for slot, req in enumerate(wave):
+            self._absorb(req, int(tokens[slot, 0]))
+
+        horizon = min(
+            max(r.max_new for r in wave) - 1,
+            self.cfg.max_len - S - 1,
+        )
+        steps = 0
+        for t in range(horizon):
+            if all(r.done for r in wave):
+                break                       # early finishers end the wave
+            logits, cache = self._decode(
+                self.params, cache, tokens, S + t)
+            nxt = self._select(logits)
+            tokens = nxt[:, None]
+            for slot, req in enumerate(wave):
+                self._absorb(req, int(nxt[slot]))
+            steps += 1
+        return steps
 
     # ----------------------------------------------------------- ckpt hooks
     @staticmethod

@@ -1,0 +1,146 @@
+"""Compressed-resident serving (paper §4.8): the engine keeps NmCompressed
+leaves end-to-end — no ``decompress_params`` on the serve path — and its
+outputs are bit-identical to serving the dense-decompressed baseline.
+``decompress_params`` survives purely as the correctness oracle here."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import PruneConfig, prune_model
+from repro.core.sparsity import NmCompressed
+from repro.data.pipeline import calibration_batches
+from repro.models import layers as L
+from repro.models.model_builder import ModelAdapter, build_model
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve.compressed import compress_params, decompress_params
+
+
+@pytest.fixture(scope="module")
+def compressed_setup():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = calibration_batches(cfg, num_samples=8, seq_len=16, batch=4)
+    pruned, report = prune_model(
+        params, ModelAdapter(model), batches,
+        PruneConfig(method="magnitude", pattern="nm", n=2, m=4))
+    comp = compress_params(pruned, report.masks, 2, 4)
+    return cfg, model, comp
+
+
+def _run_engine(model, params, cfg, *, serve_cfg=None, n_req=3, max_new=4):
+    eng = ServingEngine(model, params,
+                        serve_cfg or ServeConfig(batch_slots=2, max_len=24))
+    rng = np.random.default_rng(7)
+    for uid in range(n_req):
+        eng.submit(Request(uid, rng.integers(0, cfg.vocab_size, size=5),
+                           max_new=max_new))
+    return eng, {r.uid: r.out for r in eng.run()}
+
+
+def _nm_leaves(tree):
+    return [l for l in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, NmCompressed))
+        if isinstance(l, NmCompressed)]
+
+
+def test_engine_never_decompresses(compressed_setup, monkeypatch):
+    """No dense kernel is ever materialized for NmCompressed leaves: the
+    params tree stays compressed and decompress_params/unpack_nm are never
+    invoked on the serve path."""
+    cfg, model, comp = compressed_setup
+
+    def boom(*a, **k):
+        raise AssertionError("dense materialization on the serve path")
+
+    import repro.core.sparsity as sparsity
+    import repro.serve.compressed as compressed
+    import repro.serve.engine as engine_mod
+
+    monkeypatch.setattr(compressed, "decompress_params", boom)
+    monkeypatch.setattr(sparsity, "unpack_nm", boom)
+    assert not hasattr(engine_mod, "decompress_params")
+
+    eng, outs = _run_engine(model, comp, cfg)
+    assert _nm_leaves(eng.params), "engine must keep compressed leaves"
+    assert all(len(v) == 4 for v in outs.values())
+
+
+def test_compressed_outputs_bit_identical_to_dense_oracle(compressed_setup):
+    cfg, model, comp = compressed_setup
+    dense = decompress_params(comp)          # the correctness oracle
+    assert not _nm_leaves(dense)
+    _, outs_comp = _run_engine(model, comp, cfg)
+    _, outs_dense = _run_engine(model, dense, cfg)
+    assert outs_comp == outs_dense
+
+
+def test_nm_impl_threads_from_serve_config(compressed_setup):
+    """ServeConfig nm_* knobs reach layers.dense: forcing the Pallas
+    (interpret, on CPU) impl still reproduces the ref-impl tokens."""
+    cfg, model, comp = compressed_setup
+    _, outs_ref = _run_engine(
+        model, comp, cfg,
+        serve_cfg=ServeConfig(batch_slots=2, max_len=16, nm_impl="ref"),
+        n_req=2, max_new=2)
+    _, outs_pal = _run_engine(
+        model, comp, cfg,
+        serve_cfg=ServeConfig(batch_slots=2, max_len=16, nm_impl="pallas"),
+        n_req=2, max_new=2)
+    assert outs_ref == outs_pal
+    assert L.get_nm_kernel() is None         # scope restored after run()
+
+
+def test_build_model_nm_kernel_reaches_engine(compressed_setup):
+    from repro.kernels.ops import NmKernelConfig
+
+    cfg, model, _ = compressed_setup
+    m2 = build_model(cfg, nm_kernel=NmKernelConfig(impl="ref"))
+    eng = ServingEngine(m2, m2.init(jax.random.PRNGKey(1)),
+                        ServeConfig(batch_slots=2, max_len=16))
+    assert eng.nm_kernel == NmKernelConfig(impl="ref")
+    # ServeConfig overrides win over the model-level default
+    eng2 = ServingEngine(m2, eng.params,
+                         ServeConfig(batch_slots=2, max_len=16,
+                                     nm_impl="pallas", nm_block_c=64))
+    assert eng2.nm_kernel.impl == "pallas"
+    assert eng2.nm_kernel.block_c == 64
+
+
+def test_wave_ends_when_every_slot_done(compressed_setup):
+    """Early finishers end the wave: with an EOS sampled immediately, no
+    decode steps run even though max_new would allow a long horizon."""
+    cfg, model, comp = compressed_setup
+    EOS = 3
+
+    def make(eos_id):
+        eng = ServingEngine(
+            model, comp,
+            ServeConfig(batch_slots=2, max_len=32, eos_id=eos_id))
+        calls = {"n": 0}
+        orig = eng._decode
+
+        def counting(*a):
+            calls["n"] += 1
+            return orig(*a)
+
+        eng._decode = counting
+        eng._select = lambda logits: jnp.full(
+            (logits.shape[0],), EOS, jnp.int32)
+        for uid in range(2):
+            eng.submit(Request(uid, np.arange(4), max_new=8))
+        return eng, calls
+
+    eng, calls = make(eos_id=EOS)
+    done = eng.run()
+    assert calls["n"] == 0                       # wave ended at prefill
+    assert all(r.out == [EOS] and r.done for r in done)
+
+    eng, calls = make(eos_id=-1)                 # no EOS: full horizon
+    done = eng.run()
+    assert calls["n"] == 7                       # max_new − 1 decode steps
+    assert all(len(r.out) == 8 for r in done)

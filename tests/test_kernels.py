@@ -8,44 +8,60 @@ import pytest
 
 from repro.core.masks import nm_mask
 from repro.core.sparsity import (
-    NmCompressed, compression_ratio, pack_nm, unpack_nm,
+    NmCompressed, compression_ratio, pack_indices4, pack_nm,
+    unpack_indices4, unpack_nm,
 )
 from repro.kernels import ops, ref
 from repro.kernels.hessian_accum import hessian_xtx
 from repro.kernels.nm_spmm import nm_matmul
 
 
-def _packed(c, b, n, m, dtype, seed=0):
+def _packed(c, b, n, m, dtype, seed=0, idx_bits=4):
     rng = np.random.default_rng(seed)
     w = jnp.asarray(rng.normal(size=(c, b)), dtype)
     xn = jnp.asarray(rng.uniform(0.5, 2.0, size=(b,)), jnp.float32)
     mask = nm_mask(w.astype(jnp.float32), xn, n, m)
     wm = jnp.where(mask > 0.5, 0, w)
-    return wm, pack_nm(wm, mask, n, m)
+    return wm, pack_nm(wm, mask, n, m, idx_bits=idx_bits)
 
 
 class TestPackUnpack:
-    @pytest.mark.parametrize("n,m", [(2, 4), (4, 8), (1, 4), (3, 4)])
-    def test_roundtrip(self, n, m):
-        wm, packed = _packed(32, 64, n, m, jnp.float32)
+    @pytest.mark.parametrize("idx_bits", [4, 8])
+    @pytest.mark.parametrize("n,m", [(2, 4), (4, 8), (1, 4), (3, 4), (5, 8)])
+    def test_roundtrip(self, n, m, idx_bits):
+        wm, packed = _packed(32, 64, n, m, jnp.float32, idx_bits=idx_bits)
         np.testing.assert_array_equal(np.asarray(unpack_nm(packed)),
                                       np.asarray(wm))
 
+    @pytest.mark.parametrize("c,L", [(3, 8), (5, 7), (1, 1), (4, 13)])
+    def test_indices4_roundtrip(self, c, L):
+        rng = np.random.default_rng(c * 31 + L)
+        idx = jnp.asarray(rng.integers(0, 16, size=(c, L)), jnp.int8)
+        packed = pack_indices4(idx)
+        assert packed.shape == (c, (L + 1) // 2)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_indices4(packed, L)), np.asarray(idx))
+
     def test_compression_ratio(self):
         packed_bf = _packed(32, 64, 2, 4, jnp.bfloat16)[1]
-        # bf16 2:4: 50% values + 1 B int8 index per kept value = 0.75
-        # (4-bit index packing would give the paper-style 0.625)
-        assert abs(compression_ratio(packed_bf) - 0.75) < 1e-6
+        # bf16 2:4: 50% values + ½ B packed 4-bit index per kept value —
+        # the paper-style 0.625 (int8 indices would give 0.75)
+        assert abs(compression_ratio(packed_bf) - 0.625) < 1e-6
         packed_f32 = _packed(32, 64, 2, 4, jnp.float32)[1]
-        assert abs(compression_ratio(packed_f32) - 0.625) < 1e-6
+        assert abs(compression_ratio(packed_f32) - 0.5625) < 1e-6
+        packed_i8 = _packed(32, 64, 2, 4, jnp.bfloat16, idx_bits=8)[1]
+        assert abs(compression_ratio(packed_i8) - 0.75) < 1e-6
 
-    def test_expand_matches_ref(self):
-        wm, packed = _packed(16, 32, 2, 4, jnp.float32)
-        dense = ref.nm_expand(packed.values, packed.indices, 2, 4, 32)
+    @pytest.mark.parametrize("idx_bits", [4, 8])
+    def test_expand_matches_ref(self, idx_bits):
+        wm, packed = _packed(16, 32, 2, 4, jnp.float32, idx_bits=idx_bits)
+        dense = ref.nm_expand(packed.values, packed.indices, 2, 4, 32,
+                              idx_bits)
         np.testing.assert_array_equal(np.asarray(dense), np.asarray(wm))
 
 
 class TestNmSpmm:
+    @pytest.mark.parametrize("idx_bits", [4, 8])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize("c,b,B,n,m,bb,bc", [
         (128, 256, 8, 2, 4, 128, 64),
@@ -53,13 +69,15 @@ class TestNmSpmm:
         (64, 128, 16, 1, 4, 64, 32),
         (128, 128, 2, 2, 4, 128, 128),   # single tile
     ])
-    def test_vs_oracle(self, dtype, c, b, B, n, m, bb, bc):
+    def test_vs_oracle(self, dtype, c, b, B, n, m, bb, bc, idx_bits):
         rng = np.random.default_rng(c + b)
-        wm, packed = _packed(c, b, n, m, dtype, seed=b)
+        wm, packed = _packed(c, b, n, m, dtype, seed=b, idx_bits=idx_bits)
         x = jnp.asarray(rng.normal(size=(B, b)), dtype)
         y_k = nm_matmul(x, packed.values, packed.indices, n=n, m=m, b=b,
-                        block_b=bb, block_c=bc, interpret=True)
-        y_r = ref.nm_matmul_ref(x, packed.values, packed.indices, n, m, b)
+                        idx_bits=idx_bits, block_b=bb, block_c=bc,
+                        interpret=True)
+        y_r = ref.nm_matmul_ref(x, packed.values, packed.indices, n, m, b,
+                                idx_bits)
         np.testing.assert_allclose(
             np.asarray(y_k, np.float32), np.asarray(y_r, np.float32),
             rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
@@ -70,9 +88,31 @@ class TestNmSpmm:
         wm, packed = _packed(64, 128, 2, 4, jnp.float32)
         rng = np.random.default_rng(9)
         x = jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)
-        y_k = ops.nm_matmul(x, packed, block_b=64, block_c=64)
+        y_k = ops.nm_matmul(x, packed, impl="pallas", block_b=64, block_c=64)
         y_d = x @ wm.T
         np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_d),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("n,m", [(2, 4), (4, 8), (3, 4), (5, 8)])
+    @pytest.mark.parametrize("c,b,B", [
+        (37, 24, 5),     # odd c — not a multiple of any tile
+        (64, 96, 3),     # b not a multiple of the default 128 tile, odd B
+        (129, 520, 7),   # b with a 4-bit-unfriendly tiling (g·keep odd cases)
+    ])
+    def test_parity_ref_pallas_dense_nondivisible(self, c, b, B, n, m):
+        """Three-way parity — ref vs pallas-interpret vs dense — on shapes
+        the tile grid does not divide (the ops wrapper pads and slices)."""
+        if b % m:
+            pytest.skip("b must be a multiple of m by format")
+        rng = np.random.default_rng(c * 1000 + b + m)
+        wm, packed = _packed(c, b, n, m, jnp.float32, seed=b + m)
+        x = jnp.asarray(rng.normal(size=(B, b)), jnp.float32)
+        y_dense = x @ wm.T
+        y_ref = ops.nm_matmul(x, packed, impl="ref")
+        y_pal = ops.nm_matmul(x, packed, impl="pallas")
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_dense),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_dense),
                                    rtol=1e-4, atol=1e-4)
 
     def test_ops_wrapper_leading_dims(self):
@@ -81,6 +121,18 @@ class TestNmSpmm:
         x = jnp.asarray(rng.normal(size=(2, 3, 64)), jnp.float32)
         y = ops.nm_matmul(x, packed, impl="ref")
         assert y.shape == (2, 3, 32)
+
+    def test_choose_tiles_respects_layout(self):
+        """Chosen b tiles divide b, align to m, and keep 4-bit index tiles
+        on byte boundaries whenever more than one contraction step runs."""
+        for (B, c, b, m, keep, bits) in [
+            (8, 2048, 2048, 4, 2, 4), (3, 37, 96, 8, 3, 4),
+            (1, 7, 520, 4, 3, 4), (16, 512, 1024, 8, 4, 8),
+        ]:
+            t = ops.choose_tiles(B, c, b, m, keep, bits)
+            assert b % t["block_b"] == 0 and t["block_b"] % m == 0
+            gb = t["block_b"] // m * keep
+            assert bits == 8 or t["block_b"] == b or gb % 2 == 0
 
 
 class TestHessianAccum:

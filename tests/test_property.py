@@ -14,7 +14,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import PruneConfig, prune_layer
 from repro.core.masks import check_nm, nm_mask, psi_x, wanda_metric
-from repro.core.sparsity import pack_nm, unpack_nm
+from repro.core.sparsity import (
+    pack_indices4, pack_nm, unpack_indices4, unpack_nm,
+)
 from repro.core.thanos import prune_unstructured
 from repro.data.pipeline import SyntheticCorpus
 from conftest import recon_error
@@ -59,9 +61,10 @@ def test_nm_mask_invariant(c, groups, nm, seed):
 
 
 @given(c=st.integers(2, 12), groups=st.integers(1, 6),
-       nm=st.sampled_from([(2, 4), (4, 8)]), seed=st.integers(0, 10_000))
+       nm=st.sampled_from([(2, 4), (4, 8), (1, 4), (3, 4), (5, 8)]),
+       idx_bits=st.sampled_from([4, 8]), seed=st.integers(0, 10_000))
 @settings(**SETTINGS)
-def test_pack_unpack_roundtrip(c, groups, nm, seed):
+def test_pack_unpack_roundtrip(c, groups, nm, idx_bits, seed):
     n, m = nm
     b = groups * m
     rng = np.random.default_rng(seed)
@@ -69,8 +72,48 @@ def test_pack_unpack_roundtrip(c, groups, nm, seed):
     xn = jnp.ones((b,), jnp.float32)
     mask = nm_mask(w, xn, n, m)
     wm = jnp.where(mask > 0.5, 0.0, w)
-    assert np.array_equal(np.asarray(unpack_nm(pack_nm(wm, mask, n, m))),
-                          np.asarray(wm))
+    packed = pack_nm(wm, mask, n, m, idx_bits=idx_bits)
+    assert np.array_equal(np.asarray(unpack_nm(packed)), np.asarray(wm))
+
+
+@given(c=st.integers(1, 10), length=st.integers(1, 40),
+       seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_indices4_roundtrip_any_length(c, length, seed):
+    """Two-per-byte nibble packing round-trips for any (c, L), odd L
+    included (final high nibble is padding)."""
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 16, size=(c, length)), jnp.int8)
+    packed = pack_indices4(idx)
+    assert packed.shape == (c, (length + 1) // 2)
+    assert np.array_equal(np.asarray(unpack_indices4(packed, length)),
+                          np.asarray(idx))
+
+
+@given(c=st.integers(3, 20), groups=st.integers(1, 6),
+       B=st.integers(1, 9), nm=st.sampled_from([(2, 4), (4, 8), (3, 4)]),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_nm_matmul_three_way_parity(c, groups, B, nm, seed):
+    """ref vs pallas-interpret vs dense agree on arbitrary (c, b, B) —
+    including shapes no tile divides (the ops wrapper pads and slices)."""
+    from repro.kernels import ops
+
+    n, m = nm
+    b = groups * m
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(c, b)), jnp.float32)
+    mask = nm_mask(w, jnp.ones((b,), jnp.float32), n, m)
+    wm = jnp.where(mask > 0.5, 0.0, w)
+    packed = pack_nm(wm, mask, n, m)
+    x = jnp.asarray(rng.normal(size=(B, b)), jnp.float32)
+    y_dense = np.asarray(x @ wm.T)
+    np.testing.assert_allclose(
+        np.asarray(ops.nm_matmul(x, packed, impl="ref")), y_dense,
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ops.nm_matmul(x, packed, impl="pallas")), y_dense,
+        rtol=1e-4, atol=1e-4)
 
 
 @given(r=st.integers(0, 32 * 16), seed=st.integers(0, 1000))
