@@ -8,8 +8,17 @@ one-hot* expansion (the pre-rework ref formulation, kept here as the
 baseline) so the scatter-rework speedup is a tracked number — the ratio is
 reported in DESIGN.md §9.
 
-    python -m benchmarks.bench_serve --quick            # CI artifact run
-    python -m benchmarks.bench_serve                    # full grid
+``--trace`` adds the **mixed-length Poisson-arrival serving trace**:
+the same request trace (compressed-resident params) served end-to-end by
+the continuous slot-level scheduler vs the legacy wave scheduler —
+tokens/s, time-to-first-token and slot occupancy per scheduler, with a
+cross-check that per-uid outputs are identical (DESIGN.md §10).  Arrivals
+tick in *virtual time* (engine work units: 1/decode step, S/prefill), so
+the arrival pattern is machine-independent; tokens/s and TTFT are wall
+clock with a full untimed warm-up pass first.
+
+    python -m benchmarks.bench_serve --quick --trace    # CI artifact run
+    python -m benchmarks.bench_serve --trace            # full grid
 
 Protocol (same as ``benchmarks/common.timeit``): one untimed warm-up call
 compiles the jitted decode_step and is fully ``block_until_ready``'d, then
@@ -149,6 +158,116 @@ def run_grid(grid, *, warmup=1, iters=5, verbose=True) -> list[dict]:
     return rows
 
 
+# --------------------------------------------------------------------------
+# mixed-length Poisson-arrival serving trace (continuous vs wave)
+# --------------------------------------------------------------------------
+TRACE_LENS = (4, 6, 8, 12)        # bucketed prompt lengths (bounded compiles)
+
+
+MAX_NEW_MIX = ((4, 6, 8, 48), (0.4, 0.3, 0.2, 0.1))   # heavy-tailed decode
+
+
+def make_arrival_trace(seed: int, n: int, vocab: int,
+                       *, lam: float = 2.0) -> list[dict]:
+    """Deterministic mixed-length trace with Poisson arrivals in virtual
+    time (engine work units), so the pattern is machine-independent.
+
+    ``max_new`` is heavy-tailed (mostly short, ~10% long) — the production
+    mix where wave batching's lockstep-to-the-longest hurts most; ``lam``
+    keeps the system loaded so slots are contended."""
+    rng = np.random.default_rng(seed)
+    arrival = 0
+    trace = []
+    for uid in range(n):
+        trace.append({
+            "uid": uid,
+            "prompt": rng.integers(
+                0, vocab, size=int(rng.choice(TRACE_LENS))).astype(np.int32),
+            "max_new": int(rng.choice(MAX_NEW_MIX[0], p=MAX_NEW_MIX[1])),
+            "arrival": arrival,
+        })
+        arrival += int(rng.poisson(lam))
+    return trace
+
+
+def _drive_trace(engine, trace) -> tuple[float, list]:
+    """Submit requests as virtual time passes; drain; → (wall_s, requests)."""
+    from repro.serve import Request
+
+    reqs = [Request(t["uid"], t["prompt"], max_new=t["max_new"])
+            for t in trace]
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(reqs) or not engine.idle():
+        while i < len(reqs) and trace[i]["arrival"] <= engine.stats["vtime"]:
+            engine.submit(reqs[i])
+            i += 1
+        if not engine.pump():
+            if i >= len(reqs):
+                break
+            # idle with future arrivals: fast-forward the virtual clock
+            engine.stats["vtime"] = trace[i]["arrival"]
+    engine.run()                       # drain bookkeeping (already idle)
+    return time.perf_counter() - t0, reqs
+
+
+def run_trace(*, d: int, n_requests: int, slots: int, seed: int = 0,
+              verbose=True) -> list[dict]:
+    """Serve one trace with both schedulers on compressed-resident params."""
+    from repro.serve import ServeConfig, ServingEngine
+
+    cfg = bench_config(d)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = calibration_batches(cfg, num_samples=4, seq_len=16, batch=4)
+    pruned, report = prune_model(
+        params, ModelAdapter(model), batches,
+        PruneConfig(method="magnitude", pattern="nm", n=2, m=4))
+    comp = compress_params(pruned, report.masks, 2, 4)
+    trace = make_arrival_trace(seed, n_requests, cfg.vocab_size)
+    max_len = max(TRACE_LENS) + max(MAX_NEW_MIX[0]) + 2
+
+    rows, outs = [], {}
+    for scheduler in ("continuous", "wave"):
+        def engine():
+            return ServingEngine(
+                model, comp,
+                ServeConfig(batch_slots=slots, max_len=max_len,
+                            scheduler=scheduler))
+
+        _drive_trace(engine(), trace)              # untimed warm-up/compile
+        eng = engine()
+        wall, reqs = _drive_trace(eng, trace)
+        st = eng.stats
+        tokens = sum(len(r.out) for r in reqs)
+        ttfts = [r.t_first - r.t_submit for r in reqs if r.t_first >= 0]
+        outs[scheduler] = {r.uid: list(r.out) for r in reqs}
+        rows.append({
+            "variant": f"trace_{scheduler}",
+            "d_model": d, "batch_slots": slots, "requests": n_requests,
+            "trace_seed": seed,
+            "wall_s": wall,
+            "tokens_per_s": tokens / wall,
+            "ttft_mean_s": float(np.mean(ttfts)),
+            "ttft_p90_s": float(np.quantile(ttfts, 0.9)),
+            "decode_steps": st["decode_steps"],
+            "slot_occupancy": (st["busy_slot_steps"]
+                               / max(1, st["decode_steps"] * slots)),
+        })
+    assert outs["continuous"] == outs["wave"], \
+        "schedulers disagree on per-uid outputs"
+    if verbose:
+        c, w = rows[0], rows[1]
+        print(f"trace d={d} slots={slots} n={n_requests}: "
+              f"continuous {c['tokens_per_s']:7.1f} tok/s "
+              f"ttft {c['ttft_mean_s']*1e3:6.1f} ms | "
+              f"wave {w['tokens_per_s']:7.1f} tok/s "
+              f"ttft {w['ttft_mean_s']*1e3:6.1f} ms | "
+              f"speedup {c['tokens_per_s']/w['tokens_per_s']:.2f}x",
+              flush=True)
+    return rows
+
+
 def _git_rev() -> str:
     try:
         return subprocess.run(
@@ -163,6 +282,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="single small cell (CI artifact run)")
+    ap.add_argument("--trace", action="store_true",
+                    help="add the mixed-length Poisson-arrival serving "
+                         "trace (continuous vs wave scheduler)")
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--warmup", type=int, default=1)
     ap.add_argument("--out", default="",
@@ -177,6 +299,11 @@ def main() -> None:
 
     grid = QUICK_GRID if args.quick else FULL_GRID
     rows = run_grid(grid, warmup=args.warmup, iters=args.iters)
+
+    trace_rows: list[dict] = []
+    if args.trace:
+        trace_rows = (run_trace(d=64, n_requests=16, slots=4) if args.quick
+                      else run_trace(d=128, n_requests=32, slots=4))
 
     by_key: dict[tuple, dict] = {}
     for r in rows:
@@ -204,6 +331,20 @@ def main() -> None:
         "scatter_vs_onehot_speedup": speedups,
         "scatter_vs_onehot_median": float(np.median(list(speedups.values()))),
     }
+    if trace_rows:
+        cont = next(r for r in trace_rows
+                    if r["variant"] == "trace_continuous")
+        wave = next(r for r in trace_rows if r["variant"] == "trace_wave")
+        record["results"].extend(trace_rows)
+        record["trace"] = {
+            "tokens_per_s_speedup": cont["tokens_per_s"]
+            / wave["tokens_per_s"],
+            "ttft_mean_ratio": wave["ttft_mean_s"] / cont["ttft_mean_s"],
+            "ttft_p90_ratio": wave["ttft_p90_s"] / cont["ttft_p90_s"],
+            "occupancy": {"continuous": cont["slot_occupancy"],
+                          "wave": wave["slot_occupancy"]},
+            "outputs_identical_per_uid": True,   # asserted in run_trace
+        }
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
         f.write("\n")

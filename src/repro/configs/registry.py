@@ -88,12 +88,16 @@ def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
 
 
 def decode_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
-    """Abstract (tokens, pos) for a single decode step with seq_len-deep cache."""
+    """Abstract (tokens, pos) for a single decode step with seq_len-deep cache.
+
+    ``pos`` is per-slot (B,) int32 — the continuous-batching decode API
+    (models accept a () scalar too, but production lowers the vector form).
+    """
     SDS = jax.ShapeDtypeStruct
     B = cell.global_batch
     specs = {
         "tokens": SDS((B, 1), jnp.int32),
-        "pos": SDS((), jnp.int32),
+        "pos": SDS((B,), jnp.int32),
     }
     if cfg.family == "encdec":
         # cross-attend to a natural 30 s encoder source (1500 frames)

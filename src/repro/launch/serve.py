@@ -31,6 +31,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "wave"],
+                    help="slot-level continuous batching (default) or the "
+                         "legacy wave scheduler")
     ap.add_argument("--nm", action="store_true",
                     help="Thanos-prune 2:4 and serve compressed-resident")
     ap.add_argument("--nm-impl", default="",
@@ -62,6 +66,7 @@ def main():
         model, params,
         ServeConfig(batch_slots=args.slots,
                     max_len=args.prompt_len + args.max_new + 8,
+                    scheduler=args.scheduler,
                     nm_impl=args.nm_impl,
                     nm_block_b=args.nm_block_b,
                     nm_block_c=args.nm_block_c),
@@ -76,8 +81,13 @@ def main():
     done = engine.run()
     dt = time.perf_counter() - t0
     tokens = sum(len(r.out) for r in done)
+    st = engine.stats
+    occ = (st["busy_slot_steps"] / (st["decode_steps"] * args.slots)
+           if st["decode_steps"] else 0.0)
     print(f"{len(done)} requests, {tokens} tokens in {dt:.2f}s "
-          f"({tokens / dt:.1f} tok/s incl. compile)")
+          f"({tokens / dt:.1f} tok/s incl. compile; "
+          f"{args.scheduler}: {st['decode_steps']} decode steps, "
+          f"slot occupancy {occ:.2f})")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out}")
 

@@ -394,6 +394,8 @@ def make_decode_step(model, mesh: Mesh, cell,
                         is_leaf=lambda x: isinstance(x, P))
     dp = D.data_axes(mesh)
     tok_spec = P(dp) if B % _dp_size(mesh) == 0 else P()
+    # per-slot positions ride the same data-parallel layout as the tokens
+    pos_sh = _ns(mesh, tok_spec)
 
     if cfg.family == "encdec":
         def serve_step(params, cache, tokens, pos, enc_out):
@@ -411,7 +413,7 @@ def make_decode_step(model, mesh: Mesh, cell,
         jitted = jax.jit(
             serve_step,
             in_shardings=(p_sh, c_sh, _ns(mesh, P(*tok_spec, None)),
-                          _ns(mesh, P()), enc_sh),
+                          pos_sh, enc_sh),
             out_shardings=None,
             donate_argnums=(1,),
         )
@@ -422,7 +424,7 @@ def make_decode_step(model, mesh: Mesh, cell,
         jitted = jax.jit(
             serve_step,
             in_shardings=(p_sh, c_sh, _ns(mesh, P(*tok_spec, None)),
-                          _ns(mesh, P())),
+                          pos_sh),
             out_shardings=None,
             donate_argnums=(1,),
         )

@@ -3,13 +3,22 @@ with training, prefill and single-token decode paths + KV caches.
 
 Cache layouts (decode):
   GQA full     : k/v (B, L_max, H_kv, Dh), absolute slots.
-  GQA sliding  : k/v (B, W, H_kv, Dh) ring buffer, per-slot position ids.
+  GQA sliding  : k/v (B, W, H_kv, Dh) ring buffer, per-row position ids.
                  RoPE is applied at *write* time (absolute positions), which
                  preserves relative phases between pre-rotated q and k.
   MLA          : compressed c_kv (B, L_max, kv_lora) + k_rope (B, L_max, Dr);
                  decode uses the absorbed formulation (weights folded into
                  the query / output) so per-step cost is O(L·(kv_lora+Dr))
                  and cache bytes are ~(kv_lora+Dr)/(H·(Dh_k+Dh_v)) of dense.
+
+Decode positions are **per slot**: ``pos`` may be a scalar (every batch row
+at the same depth — wave batching, and the historical API) or a (B,) int32
+vector of independent absolute positions (continuous batching).  The scalar
+form keeps the contiguous ``dynamic_update_slice`` cache writes; the vector
+form scatters each row's k/v into its own slot (``.at[rows, slot]``) and
+masks attention per row.  Both forms share the per-row ``pos_ids`` /
+``length`` bookkeeping, so a scalar step is bit-identical to the matching
+all-equal vector step.
 """
 from __future__ import annotations
 
@@ -22,6 +31,21 @@ from repro.models import layers as L
 
 Array = jax.Array
 NEG_INF = -1e30
+
+
+def slot_positions(pos, batch: int) -> Array:
+    """Normalize decode positions to a per-slot (B,) int32 vector.
+
+    Accepts a python int, a () array (legacy scalar API) or an already
+    per-slot (B,) vector.  Whether ``pos`` was scalar is a *static* property
+    (``jnp.ndim``), so callers can branch on it at trace time.
+    """
+    p = jnp.asarray(pos, jnp.int32)
+    if p.ndim == 0:
+        return jnp.broadcast_to(p, (batch,))
+    if p.shape != (batch,):
+        raise ValueError(f"per-slot pos must be () or ({batch},), got {p.shape}")
+    return p
 
 
 # ==========================================================================
@@ -100,7 +124,7 @@ def gqa_forward(p, cfg, x, positions, *, theta, window=0, is_causal=True,
 class GqaCache(NamedTuple):
     k: Array          # (B, L, Hkv, Dh) — L = max_len (full) or window (SWA)
     v: Array
-    pos_ids: Array    # (L,) absolute position stored in each slot (-1 empty)
+    pos_ids: Array    # (B, L) absolute position stored per row slot (-1 empty)
     window: int       # 0 = full cache (STATIC aux data, not traced)
 
     def tree_flatten(self):
@@ -124,7 +148,7 @@ class QuantGqaCache(NamedTuple):
     v: Array          # (B, L, Hkv, Dh) int8
     k_scale: Array    # (B, L, Hkv) fp16-range scales (fp32)
     v_scale: Array
-    pos_ids: Array    # (L,)
+    pos_ids: Array    # (B, L)
     window: int
 
     def tree_flatten(self):
@@ -146,13 +170,13 @@ def gqa_cache_init(cfg, batch: int, max_len: int, window: int = 0,
             v=jnp.zeros(shape, jnp.int8),
             k_scale=jnp.zeros(shape[:3], jnp.float32),
             v_scale=jnp.zeros(shape[:3], jnp.float32),
-            pos_ids=jnp.full((slots,), -1, jnp.int32),
+            pos_ids=jnp.full((batch, slots), -1, jnp.int32),
             window=window,
         )
     return GqaCache(
         k=jnp.zeros((batch, slots, cfg.num_kv_heads, cfg.head_dim), dtype),
         v=jnp.zeros((batch, slots, cfg.num_kv_heads, cfg.head_dim), dtype),
-        pos_ids=jnp.full((slots,), -1, jnp.int32),
+        pos_ids=jnp.full((batch, slots), -1, jnp.int32),
         window=window,
     )
 
@@ -168,40 +192,53 @@ def _quantize_kv(t: Array) -> tuple[Array, Array]:
 
 def gqa_decode(p, cfg, x, pos, cache, *, theta,
                tape=None, path=()):
-    """One-token decode.  x (B, 1, d); pos () int32 absolute position."""
+    """One-token decode.  x (B, 1, d); pos () or (B,) int32 absolute
+    positions (see module docstring: scalar keeps the contiguous
+    ``dynamic_update_slice`` writes, a vector scatters per row)."""
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
-    q, k, v = _qkv(p, cfg, x, positions, theta, tape, path)
+    per_slot = jnp.ndim(pos) > 0
+    pos_vec = slot_positions(pos, B)                       # (B,)
+    q, k, v = _qkv(p, cfg, x, pos_vec[:, None], theta, tape, path)
     slots = cache.k.shape[1]
-    slot = pos % slots if cache.window > 0 else pos
+    rows = jnp.arange(B)
+
+    if per_slot:
+        slot_vec = pos_vec % slots if cache.window > 0 else pos_vec
+
+        def put(buf, new):                  # (B, L, ...) ← (B, 1, ...)
+            return buf.at[rows, slot_vec].set(new[:, 0])
+
+        ids_new = cache.pos_ids.at[rows, slot_vec].set(pos_vec)
+    else:
+        slot = pos % slots if cache.window > 0 else pos
+
+        def put(buf, new):
+            return jax.lax.dynamic_update_slice(
+                buf, new, (0, slot) + (0,) * (buf.ndim - 2))
+
+        ids_new = cache.pos_ids.at[:, slot].set(pos)
 
     if isinstance(cache, QuantGqaCache):
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
-        k_new = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
-        v_new = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
-        ks_new = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, slot, 0))
-        vs_new = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, slot, 0))
+        k_new, v_new = put(cache.k, kq), put(cache.v, vq)
+        ks_new, vs_new = put(cache.k_scale, ks), put(cache.v_scale, vs)
         k_att = (k_new.astype(jnp.float32)
                  * ks_new[..., None]).astype(x.dtype)
         v_att = (v_new.astype(jnp.float32)
                  * vs_new[..., None]).astype(x.dtype)
         new_cache = QuantGqaCache(k_new, v_new, ks_new, vs_new,
-                                  cache.pos_ids.at[slot].set(pos),
-                                  cache.window)
+                                  ids_new, cache.window)
     else:
-        k_new = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
-        v_new = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        k_new, v_new = put(cache.k, k), put(cache.v, v)
         k_att, v_att = k_new, v_new
-        new_cache = GqaCache(k_new, v_new, cache.pos_ids.at[slot].set(pos),
-                             cache.window)
+        new_cache = GqaCache(k_new, v_new, ids_new, cache.window)
 
-    pos_new = new_cache.pos_ids
-    valid = (pos_new >= 0) & (pos_new <= pos)
+    valid = (ids_new >= 0) & (ids_new <= pos_vec[:, None])  # (B, L)
     if cache.window:
-        valid &= pos_new > pos - cache.window
-    mask = jnp.broadcast_to(valid[None, None, None, :], (B, 1, 1, slots))
-    out = _sdpa(q, k_att, v_att, mask, cfg.num_heads, cfg.num_kv_heads)
+        valid &= ids_new > pos_vec[:, None] - cache.window
+    out = _sdpa(q, k_att, v_att, valid[:, None, None, :],
+                cfg.num_heads, cfg.num_kv_heads)
     y = L.dense(p["wo"], out.reshape(B, 1, -1), tape, path + ("wo",))
     return y, new_cache
 
@@ -263,7 +300,7 @@ def mla_forward(p, cfg, x, positions, *, tape=None, path=()) -> Array:
 class MlaCache(NamedTuple):
     c_kv: Array     # (B, L, kv_lora)
     k_rope: Array   # (B, L, Dr)
-    length: Array   # () int32 — filled prefix
+    length: Array   # (B,) int32 — filled prefix per row
 
 
 class QuantMlaCache(NamedTuple):
@@ -281,7 +318,7 @@ class QuantMlaCache(NamedTuple):
     c_kv: Array       # (B, L, kv_lora) int8
     c_scale: Array    # (B, L, kv_lora / G) fp32
     k_rope: Array     # (B, L, Dr) kept bf16 (tiny, phase-sensitive)
-    length: Array
+    length: Array     # (B,) int32
 
 
 MLA_INT8_GROUP = 8
@@ -301,12 +338,12 @@ def mla_cache_init(cfg, batch: int, max_len: int, dtype=jnp.float32):
             c_scale=jnp.zeros((batch, max_len, cfg.kv_lora_rank // g),
                               jnp.float32),
             k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
-            length=jnp.zeros((), jnp.int32),
+            length=jnp.zeros((batch,), jnp.int32),
         )
     return MlaCache(
         c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
         k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
-        length=jnp.zeros((), jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -316,14 +353,26 @@ def mla_decode(p, cfg, x, pos, cache: MlaCache, *, tape=None, path=()):
     score_t = q_nopeᵀ W_kᵀ c_kv[t] + q_ropeᵀ k_rope[t]; the W_k absorb costs
     O(H·dn·dkv) once per step, attention is O(L·(dkv+dr)) per head-sum —
     this is what makes 32k/500k-class decode memory-feasible for MLA.
+
+    ``pos`` is () or (B,) int32 (per-slot decode — see module docstring).
     """
     B = x.shape[0]
     H = cfg.num_heads
     dn, dv, dkv = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
-    positions = jnp.full((B, 1), pos, jnp.int32)
-    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkr(p, cfg, x, positions, tape, path)
+    per_slot = jnp.ndim(pos) > 0
+    pos_vec = slot_positions(pos, B)                       # (B,)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkr(
+        p, cfg, x, pos_vec[:, None], tape, path)
     k_rope_upd = (k_rope_new[:, None, :] if k_rope_new.ndim == 2
                   else k_rope_new)
+    rows = jnp.arange(B)
+
+    if per_slot:
+        def put(buf, new):                  # (B, L, d) ← (B, 1, d)
+            return buf.at[rows, pos_vec].set(new[:, 0])
+    else:
+        def put(buf, new):
+            return jax.lax.dynamic_update_slice(buf, new, (0, pos, 0))
 
     if isinstance(cache, QuantMlaCache):
         ng = cache.c_scale.shape[-1]
@@ -334,12 +383,10 @@ def mla_decode(p, cfg, x, pos, cache: MlaCache, *, tape=None, path=()):
         cq = jnp.clip(jnp.round(grouped / scale[..., None]), -127,
                       127).astype(jnp.int8).reshape(B, 1, dkv)
         cache = QuantMlaCache(
-            c_kv=jax.lax.dynamic_update_slice(cache.c_kv, cq, (0, pos, 0)),
-            c_scale=jax.lax.dynamic_update_slice(cache.c_scale, scale,
-                                                 (0, pos, 0)),
-            k_rope=jax.lax.dynamic_update_slice(cache.k_rope, k_rope_upd,
-                                                (0, pos, 0)),
-            length=pos + 1,
+            c_kv=put(cache.c_kv, cq),
+            c_scale=put(cache.c_scale, scale),
+            k_rope=put(cache.k_rope, k_rope_upd),
+            length=pos_vec + 1,
         )
         L_max = cache.c_kv.shape[1]
         c_att = (cache.c_kv.astype(jnp.float32).reshape(B, L_max, ng, g)
@@ -347,10 +394,9 @@ def mla_decode(p, cfg, x, pos, cache: MlaCache, *, tape=None, path=()):
                                                      ).astype(x.dtype)
     else:
         cache = MlaCache(
-            c_kv=jax.lax.dynamic_update_slice(cache.c_kv, c_kv_new, (0, pos, 0)),
-            k_rope=jax.lax.dynamic_update_slice(cache.k_rope, k_rope_upd,
-                                                (0, pos, 0)),
-            length=pos + 1,
+            c_kv=put(cache.c_kv, c_kv_new),
+            k_rope=put(cache.k_rope, k_rope_upd),
+            length=pos_vec + 1,
         )
         c_att = cache.c_kv
     # absorb W_k into q:  q_eff (B,H,dkv)
@@ -362,8 +408,8 @@ def mla_decode(p, cfg, x, pos, cache: MlaCache, *, tape=None, path=()):
         "bhd,bld->bhl", q_rope[:, 0], cache.k_rope
     )
     scale = 1.0 / jnp.sqrt(float(dn + cfg.qk_rope_head_dim))
-    valid = jnp.arange(cache.c_kv.shape[1]) <= pos
-    scores = jnp.where(valid[None, None, :], scores.astype(jnp.float32) * scale,
+    valid = jnp.arange(cache.c_kv.shape[1])[None, :] <= pos_vec[:, None]
+    scores = jnp.where(valid[:, None, :], scores.astype(jnp.float32) * scale,
                        NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     ctx = jnp.einsum("bhl,blk->bhk", probs, c_att)          # (B,H,dkv)

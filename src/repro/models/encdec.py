@@ -233,17 +233,18 @@ class EncDecLM:
         """One decoder token against a (B, T_enc, d) encoded source.
 
         ``enc_out`` may instead be a precomputed cross-KV dict from
-        ``precompute_cross_kv`` (the optimized serving path).
+        ``precompute_cross_kv`` (the optimized serving path).  ``pos`` is
+        () or (B,) int32 — per-slot decode gathers each row's sinusoidal
+        position embedding independently.
         """
         cfg = self.cfg
         B = tokens.shape[0]
         cross_cached = isinstance(enc_out, dict)
         h = L.embed(params["embed"], tokens)
-        # absolute sinusoidal position for this step
+        # absolute sinusoidal position for this step, gathered per slot
+        pos_vec = A.slot_positions(pos, B)
         sin_table = L.sinusoidal_positions(cache[0].k.shape[1], cfg.d_model)
-        h = h + jax.lax.dynamic_slice(
-            sin_table, (pos, 0), (1, cfg.d_model)
-        )[None].astype(h.dtype)
+        h = h + sin_table[pos_vec][:, None, :].astype(h.dtype)
         new_cache = {}
         for j in range(cfg.decoder_layers):
             blk = params["dec"][j]

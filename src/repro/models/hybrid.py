@@ -167,6 +167,8 @@ class HybridLM:
         return cache
 
     def decode_step(self, params, cache, tokens, pos):
+        """pos () or (B,) int32 — the Mamba state is position-free, the
+        shared GQA blocks take per-slot positions (continuous batching)."""
         cfg = self.cfg
         h = L.embed(params["embed"], tokens)
         new_cache = {"mamba": {}, "shared": {}}

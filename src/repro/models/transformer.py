@@ -193,7 +193,9 @@ class TransformerLM:
         return caches
 
     def decode_step(self, params, cache, tokens, pos, embeds=None):
-        """tokens (B, 1) int32; pos () int32.  → (logits (B,1,V), cache)."""
+        """tokens (B, 1) int32; pos () or (B,) int32 absolute positions —
+        a vector decodes every batch slot at its own depth (continuous
+        batching).  → (logits (B,1,V), cache)."""
         cfg = self.cfg
         h = L.embed(params["embed"], tokens) if embeds is None else embeds
         new_cache = {}

@@ -94,6 +94,8 @@ class XlstmLM:
         return cache
 
     def decode_step(self, params, cache, tokens, pos):
+        # pos () or (B,) accepted for API uniformity; the recurrent state is
+        # per-row and position-free, so per-slot decode is trivially correct.
         del pos
         h = L.embed(params["embed"], tokens)
         new_cache = {}

@@ -1,40 +1,54 @@
-"""Batched serving engine — wave-batched prefill/decode over fixed slots.
+"""Batched serving engine — continuous (slot-level) or wave batching over
+fixed slots.
 
-The shape discipline is TPU-grade: one jit'd ``decode_step`` with a static
-(B_slots, 1) signature runs forever; a jit'd batched prefill per bucketed
-prompt length.  Requests are served in **waves**: up to ``batch_slots``
-same-length prompts prefill together, then decode lock-step until every
-request in the wave is finished (its ``max_new`` reached, or ``eos_id``
-sampled when one is configured).  Early finishers stay in their slot — their
-tokens are ignored, so the decode signature never changes — and the wave
-ends at the first step where *every* slot is done rather than always
-decoding to the wave's max ``max_new``.
+The shape discipline is TPU-grade either way: ONE resident jit'd
+``decode_step`` with a static (B_slots, 1) signature runs forever; one
+shared jitted prefill whose internal shape-keyed compile cache buckets
+the prompt lengths (one executable per (B, S)).
 
-This is static batching; true continuous batching needs per-slot positions
-in the model decode API (the cache layouts support it — engine kept simple
-and *correct* here, the multi-pod dry-run lowers the same decode_step).
+**Continuous scheduler** (``ServeConfig.scheduler="continuous"``, default).
+Every slot carries its own ``pos`` — the per-slot position decode API —
+so heterogeneous requests decode packed in one batch.  Admission is
+slot-level: a queued request prefills at B=1 into a fresh single-row cache
+(bucketed by prompt length), the row is scattered into its slot of the
+resident cache, and the slot joins the very next decode step.  When a slot
+finishes (``max_new`` reached, ``eos_id`` sampled, or the slot's cache region
+exhausted) it is freed and re-admits from the queue immediately — a long
+request never holds the other ``batch_slots - 1`` slots hostage.  Idle slots
+keep re-decoding their last token at a frozen position: the writes are
+idempotent on their own row and invisible to every other row, so the decode
+signature never changes and each active row's token stream is bit-identical
+to serving that request alone at batch=1.
 
-Fault tolerance: engine state (cache, tokens, pos) is a pytree;
-``snapshot()/restore()`` round-trips through the checkpointer, so a
-preempted server resumes mid-generation.
+**Wave scheduler** (``scheduler="wave"``, the legacy correctness oracle).
+Up to ``batch_slots`` same-length prompts prefill together, then decode
+lock-step (scalar ``pos``) until every request in the wave is finished; the
+wave ends at the first step where *every* slot is done.
+
+Fault tolerance: ``snapshot()`` captures the whole engine — resident cache /
+tokens / per-slot positions (a pytree that round-trips through the
+checkpointer) plus the per-slot and queued request bookkeeping (plain
+JSON-able metadata + prompt arrays) — and ``restore()`` rebuilds it, so a
+preempted server resumes mid-generation with bit-identical continuations
+(tests/test_continuous_batching.py).
 
 Compressed weights: pass params whose pruned linears are ``NmCompressed``
 (serve/compressed.py) — the engine keeps them **compressed-resident**: no
 ``decompress_params`` at load, prefill and decode stream the compressed
-bytes through kernels/ops.nm_matmul (paper §4.8; dense is never
-materialized outside the matmul's own VMEM-tile expansion).  Which kernel
-impl/tiles run is the ``ServeConfig`` nm_* knobs (falling back to the
-``build_model(..., nm_kernel=)`` config, then backend auto-dispatch);
-numerics are identical to serving the decompressed weights —
-``decompress_params`` survives purely as the correctness oracle.
+bytes through kernels/ops.nm_matmul (paper §4.8).  Which kernel impl/tiles
+run is the ``ServeConfig`` nm_* knobs (falling back to the
+``build_model(..., nm_kernel=)`` config, then backend auto-dispatch).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.ops import NmKernelConfig
 from repro.models import layers as L
@@ -49,6 +63,10 @@ class Request:
     max_new: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # serving telemetry (time.perf_counter seconds; < 0 = not yet)
+    t_submit: float = -1.0
+    t_first: float = -1.0
+    t_done: float = -1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +76,7 @@ class ServeConfig:
     greedy: bool = True
     temperature: float = 1.0
     eos_id: int = -1         # < 0 = no stop token
+    scheduler: str = "continuous"   # "continuous" | "wave" (legacy oracle)
     # n:m compressed-matmul dispatch (kernels/ops.NmKernelConfig fields);
     # "" / 0 defer to the model's build_model(..., nm_kernel=) config,
     # then to backend auto-dispatch + the shape-keyed tile chooser.
@@ -67,8 +86,77 @@ class ServeConfig:
     nm_block_x: int = 0
 
 
+# --------------------------------------------------------------------------
+# shared jitted step functions
+# --------------------------------------------------------------------------
+# One jit per (model, nm-kernel-config): every engine over the same model
+# reuses the same compiled decode/prefill executables (jax.jit re-traces per
+# input *shape* internally, so the B=1 slot prefill and the B=slots wave
+# prefill share one callable).  The nm config is part of the key because it
+# is baked into the trace (layers.nm_kernel_scope is read at trace time).
+_JIT_CACHE: dict[tuple, dict] = {}
+_JIT_CACHE_MAX = 8          # FIFO-evict beyond this many (model, nm) entries
+
+
+def _decode_fn(model, params, cache, tokens, pos):
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+    return logits[:, -1, :], cache
+
+
+def _prefill_fn(model, params, cache, tokens):
+    """Cached prefill: sequential decode over the prompt, batched."""
+
+    def body(i, carry):
+        cache, _ = carry
+        tok = jax.lax.dynamic_slice(tokens, (0, i), (tokens.shape[0], 1))
+        logits, cache = model.decode_step(params, cache, tok, i)
+        return cache, logits[:, -1, :]
+
+    B = tokens.shape[0]
+    init_logits = jnp.zeros((B, model.cfg.vocab_size), jnp.float32)
+    return jax.lax.fori_loop(0, tokens.shape[1], body, (cache, init_logits))
+
+
+def _write_slot_fn(cache, row_cache, slot):
+    """Scatter a batch=1 cache into row ``slot`` of the resident cache.
+
+    Every traced cache leaf in the model zoo is batch-leading (GQA k/v +
+    pos_ids, MLA latents + per-row length, Mamba/xLSTM state), so one
+    dynamic_update_slice per leaf replaces the whole row — including the
+    stale tail beyond the new prompt, which the fresh row re-zeroes.
+    """
+
+    def put(full, one):
+        return jax.lax.dynamic_update_slice(
+            full, one.astype(full.dtype), (slot,) + (0,) * (one.ndim - 1))
+
+    return jax.tree.map(put, cache, row_cache)
+
+
+def _model_jits(model, nm_kernel) -> dict:
+    key = (id(model), nm_kernel)
+    entry = _JIT_CACHE.get(key)
+    if entry is None or entry["model"] is not model:   # id() reuse guard
+        # the resident cache is donated on both mutating steps (decode,
+        # slot write): the engine always rebinds ``self._cache`` to the
+        # output, and snapshot() materializes to host before capturing
+        entry = {
+            "model": model,      # strong ref pins id(model)
+            "decode": jax.jit(functools.partial(_decode_fn, model),
+                              donate_argnums=(1,)),
+            "prefill": jax.jit(functools.partial(_prefill_fn, model)),
+            "write_slot": jax.jit(_write_slot_fn, donate_argnums=(0,)),
+        }
+        while len(_JIT_CACHE) >= _JIT_CACHE_MAX:       # bound process RSS
+            _JIT_CACHE.pop(next(iter(_JIT_CACHE)))
+        _JIT_CACHE[key] = entry
+    return entry
+
+
 class ServingEngine:
     def __init__(self, model, params, cfg: ServeConfig, *, rng=None):
+        if cfg.scheduler not in ("continuous", "wave"):
+            raise ValueError(f"unknown scheduler {cfg.scheduler!r}")
         self.model = model
         self.cfg = cfg
         # compressed-resident: NmCompressed leaves stay compressed; they are
@@ -77,8 +165,22 @@ class ServingEngine:
         self.nm_kernel = self._resolve_nm_kernel(model, cfg)
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.queue: list[Request] = []
-        self._decode = jax.jit(self._decode_fn)
-        self._prefill_jits: dict[int, Any] = {}
+        self.finished: list[Request] = []
+        # virtual time in uniform work units (1/decode step, S/prefill) —
+        # machine-independent clock for trace-driven benchmarks
+        self.stats = {"decode_steps": 0, "busy_slot_steps": 0,
+                      "prefills": 0, "prefill_tokens": 0, "vtime": 0}
+        jits = _model_jits(model, self.nm_kernel)
+        self._decode = jits["decode"]
+        # one shared jitted prefill; prompt-length bucketing is its
+        # internal shape-keyed compile cache (one executable per (B, S))
+        self._prefill = jits["prefill"]
+        self._write_slot = jits["write_slot"]
+        # continuous-scheduler per-slot state (allocated on first admission)
+        self._slots: list[Request | None] = [None] * cfg.batch_slots
+        self._cache = None
+        self._tokens = np.zeros((cfg.batch_slots, 1), np.int32)
+        self._pos = np.zeros((cfg.batch_slots,), np.int32)
 
     @staticmethod
     def _resolve_nm_kernel(model, cfg: ServeConfig) -> NmKernelConfig | None:
@@ -93,26 +195,7 @@ class ServingEngine:
             )
         return getattr(model, "nm_kernel", None)
 
-    # ----------------------------------------------------------- step fns
-    def _decode_fn(self, params, cache, tokens, pos):
-        logits, cache = self.model.decode_step(params, cache, tokens, pos)
-        return logits[:, -1, :], cache
-
-    def _prefill_fn(self, params, cache, tokens):
-        """Cached prefill: sequential decode over the prompt, batched."""
-
-        def body(i, carry):
-            cache, _ = carry
-            tok = jax.lax.dynamic_slice(tokens, (0, i), (tokens.shape[0], 1))
-            logits, cache = self.model.decode_step(params, cache, tok, i)
-            return cache, logits[:, -1, :]
-
-        B = tokens.shape[0]
-        init_logits = jnp.zeros((B, self.model.cfg.vocab_size), jnp.float32)
-        return jax.lax.fori_loop(
-            0, tokens.shape[1], body, (cache, init_logits)
-        )
-
+    # ----------------------------------------------------------- helpers
     def _select(self, logits: Array) -> Array:
         if self.cfg.greedy:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -121,10 +204,132 @@ class ServingEngine:
             k, logits.astype(jnp.float32) / self.cfg.temperature, axis=-1
         ).astype(jnp.int32)
 
+    def _absorb(self, req: Request, token: int) -> None:
+        """Record one sampled token for ``req`` unless it already finished."""
+        if req.done or len(req.out) >= req.max_new:
+            req.done = True
+            return
+        req.out.append(token)
+        if req.t_first < 0:
+            req.t_first = time.perf_counter()
+        if token == self.cfg.eos_id or len(req.out) >= req.max_new:
+            req.done = True
+            req.t_done = time.perf_counter()
+
     # ----------------------------------------------------------- main loop
     def submit(self, req: Request):
+        if len(req.prompt) + 1 > self.cfg.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {len(req.prompt)} does "
+                f"not fit max_len={self.cfg.max_len} (need prompt + 1)")
+        if req.t_submit < 0:
+            req.t_submit = time.perf_counter()
         self.queue.append(req)
 
+    def idle(self) -> bool:
+        """No queued requests and no slot mid-generation."""
+        return not self.queue and all(s is None for s in self._slots)
+
+    def pump(self) -> bool:
+        """Process one scheduling quantum — one decode step (continuous) or
+        one whole wave (wave).  Returns False when there is nothing to do."""
+        with L.nm_kernel_scope(self.nm_kernel):
+            if self.cfg.scheduler == "wave":
+                wave = self._next_wave()
+                if not wave:
+                    return False
+                self._serve_wave(wave)
+                now = time.perf_counter()
+                for req in wave:
+                    req.done = True
+                    if req.t_done < 0:
+                        req.t_done = now
+                    self.finished.append(req)
+                return True
+            return self._continuous_step()
+
+    def run(self, *, max_steps: int = 100_000) -> list[Request]:
+        """Drain queue and slots; returns finished requests in uid order."""
+        steps = 0
+        while steps < max_steps and self.pump():
+            steps += 1
+        done, self.finished = self.finished, []
+        return sorted(done, key=lambda r: r.uid)
+
+    # ------------------------------------------------- continuous scheduler
+    def _ensure_state(self):
+        if self._cache is None:
+            self._cache = self.model.init_cache(
+                self.cfg.batch_slots, self.cfg.max_len)
+
+    def _retire(self, slot: int) -> None:
+        req = self._slots[slot]
+        if req.t_done < 0:
+            req.t_done = time.perf_counter()
+        self.finished.append(req)
+        self._slots[slot] = None
+        # _pos[slot] keeps its last (< max_len) value: the freed slot keeps
+        # re-decoding idempotently until the next admission overwrites it.
+
+    def _admit(self) -> bool:
+        """Fill free slots from the queue (prefill-into-slot).  The whole
+        admission — including requests that finish at their first token —
+        happens before the next decode step, so a freed slot never idles
+        while work is queued."""
+        admitted = False
+        for slot in range(self.cfg.batch_slots):
+            while self._slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                S = len(req.prompt)     # S + 1 <= max_len checked at submit
+                self._ensure_state()
+                prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                row = self.model.init_cache(1, self.cfg.max_len)
+                row, last = self._prefill(self.params, row, prompt)
+                self._cache = self._write_slot(self._cache, row, slot)
+                tok = int(np.asarray(self._select(last))[0])
+                self._absorb(req, tok)
+                self._tokens[slot, 0] = tok
+                self._pos[slot] = S
+                self.stats["prefills"] += 1
+                self.stats["prefill_tokens"] += S
+                self.stats["vtime"] += S
+                admitted = True
+                self._slots[slot] = req
+                if req.done or S + 1 >= self.cfg.max_len:
+                    req.done = True
+                    self._retire(slot)      # freed — try the queue again
+                else:
+                    break
+        return admitted
+
+    def _continuous_step(self) -> bool:
+        admitted = self._admit()
+        active = [s for s in self._slots if s is not None]
+        if not active:
+            return admitted
+        logits, self._cache = self._decode(
+            self.params, self._cache,
+            jnp.asarray(self._tokens), jnp.asarray(self._pos))
+        nxt = np.asarray(self._select(logits))
+        self.stats["decode_steps"] += 1
+        self.stats["busy_slot_steps"] += len(active)
+        self.stats["vtime"] += 1
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            self._absorb(req, int(nxt[slot]))
+            self._tokens[slot, 0] = nxt[slot]
+            # truncate exactly where the wave oracle does: the last decode
+            # position is max_len - 2 (horizon = max_len - S - 1)
+            if not req.done and self._pos[slot] + 2 >= self.cfg.max_len:
+                req.done = True              # slot cache region exhausted
+            if req.done:
+                self._retire(slot)
+            else:
+                self._pos[slot] += 1
+        return True
+
+    # ------------------------------------------------------ wave scheduler
     def _next_wave(self) -> list[Request]:
         """Pop up to batch_slots queued requests sharing one prompt length."""
         if not self.queue:
@@ -139,28 +344,6 @@ class ServingEngine:
         self.queue = rest
         return wave
 
-    def _absorb(self, req: Request, token: int) -> None:
-        """Record one sampled token for ``req`` unless it already finished."""
-        if req.done or len(req.out) >= req.max_new:
-            req.done = True
-            return
-        req.out.append(token)
-        if token == self.cfg.eos_id or len(req.out) >= req.max_new:
-            req.done = True
-
-    def run(self, *, max_steps: int = 100_000) -> list[Request]:
-        """Drain the queue; returns finished requests in uid order."""
-        finished: list[Request] = []
-        steps = 0
-        while self.queue and steps < max_steps:
-            wave = self._next_wave()
-            with L.nm_kernel_scope(self.nm_kernel):
-                steps += self._serve_wave(wave)
-            for req in wave:
-                req.done = True
-                finished.append(req)
-        return sorted(finished, key=lambda r: r.uid)
-
     def _serve_wave(self, wave: list[Request]) -> int:
         """Prefill + decode one wave; returns decode steps executed."""
         S = len(wave[0].prompt)
@@ -170,12 +353,11 @@ class ServingEngine:
             prompts = prompts.at[slot].set(
                 jnp.asarray(req.prompt, jnp.int32))
 
-        fn = self._prefill_jits.get(S)
-        if fn is None:
-            fn = jax.jit(self._prefill_fn)
-            self._prefill_jits[S] = fn
         cache = self.model.init_cache(B, self.cfg.max_len)
-        cache, last = fn(self.params, cache, prompts)
+        cache, last = self._prefill(self.params, cache, prompts)
+        self.stats["prefills"] += 1
+        self.stats["prefill_tokens"] += S * len(wave)   # tokens prefilled
+        self.stats["vtime"] += S        # work units: batched ≈ one B=1 pass
 
         tokens = self._select(last)[:, None]               # (B, 1)
         for slot, req in enumerate(wave):
@@ -193,6 +375,10 @@ class ServingEngine:
                 self.params, cache, tokens, S + t)
             nxt = self._select(logits)
             tokens = nxt[:, None]
+            self.stats["decode_steps"] += 1
+            self.stats["busy_slot_steps"] += sum(
+                1 for r in wave if not r.done)
+            self.stats["vtime"] += 1
             for slot, req in enumerate(wave):
                 self._absorb(req, int(nxt[slot]))
             steps += 1
@@ -200,5 +386,92 @@ class ServingEngine:
 
     # ----------------------------------------------------------- ckpt hooks
     @staticmethod
-    def snapshot(cache, tokens, pos) -> dict:
-        return {"cache": cache, "tokens": tokens, "pos": pos}
+    def _req_state(req: Request | None) -> dict | None:
+        if req is None:
+            return None
+        return {"uid": int(req.uid),
+                "prompt": np.asarray(req.prompt, np.int32),
+                "max_new": int(req.max_new),
+                "out": [int(t) for t in req.out],
+                "done": bool(req.done),
+                "t_submit": float(req.t_submit),
+                "t_first": float(req.t_first),
+                "t_done": float(req.t_done)}
+
+    @staticmethod
+    def _req_from_state(st: dict | None) -> Request | None:
+        if st is None:
+            return None
+        return Request(uid=int(st["uid"]),
+                       prompt=np.asarray(st["prompt"], np.int32),
+                       max_new=int(st["max_new"]),
+                       out=[int(t) for t in st["out"]],
+                       done=bool(st["done"]),
+                       t_submit=float(st.get("t_submit", -1.0)),
+                       t_first=float(st.get("t_first", -1.0)),
+                       t_done=float(st.get("t_done", -1.0)))
+
+    def snapshot(self) -> dict:
+        """Full engine state for preempt/resume.
+
+        ``device`` is a pytree of **host** (numpy) arrays — materialized
+        here both for serialization and because the live cache buffers are
+        donated to the next decode/admission step — that round-trips
+        through the checkpointer; ``slots``/``queue``/``finished`` are
+        request bookkeeping (ints + prompt arrays + telemetry stamps);
+        ``stats`` are the serving counters.  ``restore`` on a fresh engine
+        (same model/params/config) continues bit-identically.
+        """
+        return {
+            "scheduler": self.cfg.scheduler,
+            "batch_slots": self.cfg.batch_slots,
+            "max_len": self.cfg.max_len,
+            "device": {
+                "cache": (None if self._cache is None
+                          else jax.tree.map(np.asarray, self._cache)),
+                "tokens": np.array(self._tokens),
+                "pos": np.array(self._pos),
+                "rng": np.asarray(self.rng),
+            },
+            "slots": [self._req_state(r) for r in self._slots],
+            "queue": [self._req_state(r) for r in self.queue],
+            "finished": [self._req_state(r) for r in self.finished],
+            "stats": dict(self.stats),
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Rebuild engine state from ``snapshot()`` output (the docstring
+        contract the wave-era engine promised but never shipped).
+
+        Latency telemetry: requests whose (t_submit, t_first) pair was
+        stamped before the preempt keep it (TTFT stays valid); in-flight
+        requests still waiting for their first token get ``t_submit``
+        re-stamped at restore time — ``perf_counter`` epochs don't
+        transfer across processes, so mixing them would poison TTFT.
+        """
+        if snap["scheduler"] != self.cfg.scheduler:
+            raise ValueError(
+                f"snapshot from scheduler={snap['scheduler']!r} cannot "
+                f"restore into scheduler={self.cfg.scheduler!r}")
+        for field in ("batch_slots", "max_len"):
+            if snap.get(field, getattr(self.cfg, field)) != \
+                    getattr(self.cfg, field):
+                raise ValueError(
+                    f"snapshot {field}={snap[field]} does not match engine "
+                    f"{field}={getattr(self.cfg, field)} — the resident "
+                    f"cache geometry must be identical")
+        dev = snap["device"]
+        cache = dev["cache"]
+        self._cache = (None if cache is None
+                       else jax.tree.map(jnp.asarray, cache))
+        self._tokens = np.array(np.asarray(dev["tokens"]), np.int32)
+        self._pos = np.array(np.asarray(dev["pos"]), np.int32)
+        self.rng = jnp.asarray(dev["rng"])
+        self._slots = [self._req_from_state(s) for s in snap["slots"]]
+        self.queue = [self._req_from_state(s) for s in snap["queue"]]
+        self.finished = [self._req_from_state(s) for s in snap["finished"]]
+        now = time.perf_counter()
+        for req in [*self._slots, *self.queue]:
+            if req is not None and not req.done and req.t_first < 0:
+                req.t_submit = now
+        self.stats = dict(snap["stats"])

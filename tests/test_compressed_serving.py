@@ -120,7 +120,8 @@ def test_wave_ends_when_every_slot_done(compressed_setup):
     def make(eos_id):
         eng = ServingEngine(
             model, comp,
-            ServeConfig(batch_slots=2, max_len=32, eos_id=eos_id))
+            ServeConfig(batch_slots=2, max_len=32, eos_id=eos_id,
+                        scheduler="wave"))
         calls = {"n": 0}
         orig = eng._decode
 

@@ -55,15 +55,17 @@ def test_checkpoint_then_reshard_onto_mesh(tmp_path):
             np.asarray(a, np.float32), np.asarray(b, np.float32))
 
 
-def test_wave_batching_mixed_lengths_and_overflow():
-    """Requests with different prompt lengths form separate waves; more
-    requests than slots queue across waves; outputs are per-request
-    complete."""
+@pytest.mark.parametrize("scheduler", ["wave", "continuous"])
+def test_batching_mixed_lengths_and_overflow(scheduler):
+    """Requests with different prompt lengths (wave: separate waves;
+    continuous: packed per slot) and more requests than slots all complete
+    with per-request outputs."""
     cfg = get_config("tinyllama-1.1b", reduced=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServingEngine(model, params,
-                        ServeConfig(batch_slots=2, max_len=32))
+                        ServeConfig(batch_slots=2, max_len=32,
+                                    scheduler=scheduler))
     rng = np.random.default_rng(0)
     lens = [4, 4, 4, 6, 6, 4]          # 2 waves of len-4 + 1 wave of len-6
     for uid, n in enumerate(lens):
@@ -74,9 +76,10 @@ def test_wave_batching_mixed_lengths_and_overflow():
     assert all(len(r.out) == 3 and r.done for r in done)
 
 
-def test_wave_determinism_independent_of_submission_order():
+@pytest.mark.parametrize("scheduler", ["wave", "continuous"])
+def test_determinism_independent_of_submission_order(scheduler):
     """Greedy output for a request depends only on its prompt, not on
-    queue position (static batching correctness)."""
+    queue position (scheduling-independence correctness)."""
     cfg = get_config("tinyllama-1.1b", reduced=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -85,7 +88,8 @@ def test_wave_determinism_independent_of_submission_order():
 
     def serve(order):
         eng = ServingEngine(model, params,
-                            ServeConfig(batch_slots=2, max_len=24))
+                            ServeConfig(batch_slots=2, max_len=24,
+                                        scheduler=scheduler))
         for uid in order:
             eng.submit(Request(uid, prompts[uid], max_new=4))
         return {r.uid: r.out for r in eng.run()}
