@@ -37,7 +37,7 @@ except ModuleNotFoundError:                           # source checkout
 import jax
 
 from benchmarks.common import layer_problem, timeit
-from repro.core import PruneConfig, prune_layer
+from repro.core import PruneConfig, PrunePlan, prune_layer
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -60,13 +60,30 @@ def cell_key(method: str, pattern: str, c: int, b: int) -> str:
 
 
 def run_grid(sizes, *, methods=METHODS, warmup: int = 1, iters: int = 3,
-             verbose: bool = True) -> list[dict]:
+             verbose: bool = True, plan: PrunePlan | None = None) -> list[dict]:
+    """Time the method × pattern × size grid.
+
+    With ``plan`` (the recipe guard for the compat shim), every cell whose
+    (method, pattern) the plan resolves for a representative layer path is
+    required to match the grid's own hyperparameters bit-for-bit and the
+    *resolved* config object is what gets timed — so the headline cell is
+    expressed as a one-rule plan and drift between recipe and grid fails
+    loudly instead of silently benchmarking a different cell.
+    """
+    plan_cfg = plan.cfg_for("blocks/0/mlp/up/w") if plan is not None else None
     rows = []
     for c, b in sizes:
         w, h = layer_problem(c, b)
         for method in methods:
             for pattern, kw in PATTERNS:
                 cfg = PruneConfig(method=method, pattern=pattern, **kw)
+                if (plan_cfg is not None and plan_cfg.method == method
+                        and plan_cfg.pattern == pattern):
+                    if plan_cfg != cfg:
+                        raise SystemExit(
+                            f"--plan cell {plan_cfg} != grid cell {cfg}; "
+                            "recipe and benchmark grid have drifted")
+                    cfg = plan_cfg
                 h_arg = None if method == "magnitude" else h
                 t = timeit(lambda: prune_layer(w, h_arg, cfg),
                            warmup=warmup, iters=iters)
@@ -104,6 +121,10 @@ def main() -> None:
                          " perf-gate baseline)")
     ap.add_argument("--baseline", default="",
                     help="previous BENCH_prune.json to compute speedups vs")
+    ap.add_argument("--plan", default="",
+                    help="PrunePlan recipe whose resolved cell drives the "
+                         "matching grid cells (guards the compat shim; CI "
+                         "passes examples/recipes/headline_unstructured.json)")
     args = ap.parse_args()
     if not args.out:
         name = "BENCH_prune.quick.json" if args.quick else "BENCH_prune.json"
@@ -111,8 +132,9 @@ def main() -> None:
 
     sizes = QUICK_SIZES if args.quick else FULL_SIZES
     methods = tuple(args.methods.split(","))
+    plan = PrunePlan.load(args.plan) if args.plan else None
     rows = run_grid(sizes, methods=methods, warmup=args.warmup,
-                    iters=args.iters)
+                    iters=args.iters, plan=plan)
 
     record = {
         "meta": {
@@ -124,6 +146,7 @@ def main() -> None:
             "device": str(jax.devices()[0]),
             "device_count": jax.device_count(),
             "quick": args.quick,
+            "plan": args.plan,
             "protocol": "median wall s/call, warmed-up + block_until_ready",
         },
         "results": rows,

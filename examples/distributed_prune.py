@@ -14,7 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import PruneConfig, prune_layer, reconstruction_error
+from repro.core import (
+    PruneConfig, PrunePlan, PruneRule, prune_layer, reconstruction_error,
+)
 from repro.core.hessian import HessianAccumulator
 from repro.dist.prune import prune_layer_sharded
 
@@ -37,7 +39,12 @@ def main():
     cfgp = PruneConfig(method="thanos", pattern="nm", n=2, m=4,
                        block_size=128)
 
-    res_sharded = prune_layer_sharded(w, h, cfgp, mesh)
+    # the sharded driver resolves its cell through a PrunePlan — the same
+    # recipe object the model-level drivers consume (DESIGN.md §11)
+    plan = PrunePlan(rules=(PruneRule(match="embed*", cfg=None),
+                            PruneRule(match="blocks/*", cfg=cfgp)))
+    res_sharded = prune_layer_sharded(w, h, plan, mesh,
+                                      path=("blocks", 0, "mlp", "up", "w"))
     res_local = prune_layer(w, h, cfgp)
 
     err_s = float(reconstruction_error(w, res_sharded.weights, h))

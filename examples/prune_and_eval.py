@@ -1,15 +1,27 @@
 """End-to-end driver: train a ~small LM for a few hundred steps, prune it
 with every method, and compare held-out quality — the full Alg.-3 pipeline
-(deliverable b's end-to-end example).
+(deliverable b's end-to-end example), expressed through the PrunePlan
+recipe API (DESIGN.md §11).
+
+Covers the three ways to drive ``prune_model``:
+
+* ``PrunePlan.uniform(cfg)`` — the paper's one-cell-everywhere setting;
+* a mixed recipe (2:4 MLPs for the compressed serve path, unstructured
+  attention, first block dense) loaded from examples/recipes/;
+* ``allocate_sparsity`` — per-layer p under a global budget from the
+  Hessian-trace saliency stats (BESA-style non-uniform allocation).
 
     PYTHONPATH=src python examples/prune_and_eval.py [--steps 200]
 """
 import argparse
+import os
 
 import jax
 
 from repro.configs.registry import get_config
-from repro.core import PruneConfig, prune_model
+from repro.core import (
+    PruneConfig, PrunePlan, PruneRule, collect_hessian_stats, prune_model,
+)
 from repro.data.pipeline import (
     SyntheticCorpus, TrainStream, calibration_batches, heldout_loss,
 )
@@ -17,6 +29,8 @@ from repro.models.model_builder import ModelAdapter, build_model
 from repro.optim import AdamW
 from repro.optim.schedules import cosine_warmup
 from repro.train import Trainer, TrainerConfig
+
+RECIPES = os.path.join(os.path.dirname(__file__), "recipes")
 
 
 def main():
@@ -42,29 +56,59 @@ def main():
     dense = heldout_loss(model, params, cfg)
     print(f"\ndense held-out CE: {dense:.4f}")
 
-    # ---- 2. calibrate + prune with every method --------------------------
+    # ---- 2. calibrate + prune: uniform plans for every method ------------
     batches = calibration_batches(cfg, num_samples=32, seq_len=128, batch=8)
     adapter = ModelAdapter(model)
-    for tag, cfgp in [
-        ("thanos unstructured 50%", PruneConfig(method="thanos", p=0.5,
-                                                block_size=64)),
-        ("thanos 2:4 α=0.1", PruneConfig(method="thanos", pattern="nm",
-                                         n=2, m=4, alpha=0.1,
-                                         block_size=64)),
+    plans = [
+        ("thanos unstructured 50%",
+         PrunePlan.uniform(PruneConfig(method="thanos", p=0.5,
+                                       block_size=64))),
+        ("thanos 2:4 α=0.1",
+         PrunePlan.uniform(PruneConfig(method="thanos", pattern="nm",
+                                       n=2, m=4, alpha=0.1, block_size=64))),
         ("thanos structured 30% α=0.1",
-         PruneConfig(method="thanos", pattern="structured", p=0.3,
-                     alpha=0.1)),
+         PrunePlan.uniform(PruneConfig(method="thanos", pattern="structured",
+                                       p=0.3, alpha=0.1))),
         ("sparsegpt unstructured 50%",
-         PruneConfig(method="sparsegpt", p=0.5, block_size=64)),
-        ("wanda unstructured 50%", PruneConfig(method="wanda", p=0.5)),
-        ("magnitude unstructured 50%", PruneConfig(method="magnitude",
-                                                   p=0.5)),
-    ]:
-        pruned, report = prune_model(params, adapter, batches, cfgp)
+         PrunePlan.uniform(PruneConfig(method="sparsegpt", p=0.5,
+                                       block_size=64))),
+        ("wanda unstructured 50%",
+         PrunePlan.uniform(PruneConfig(method="wanda", p=0.5))),
+        ("magnitude unstructured 50%",
+         PrunePlan.uniform(PruneConfig(method="magnitude", p=0.5))),
+    ]
+
+    # mixed recipe from version control: 2:4 MLPs + unstructured attention
+    # + dense embeddings/head, with the first block kept dense on top
+    mixed = PrunePlan.load(os.path.join(RECIPES, "mixed_2to4_serve.json"))
+    mixed = PrunePlan(rules=(
+        PruneRule(match="blocks/0/*", cfg=None, name="dense-first-block"),
+        *mixed.rules,
+    ))
+    plans.append(("mixed recipe (2:4 mlp / unstr attn)", mixed))
+
+    # BESA-style non-uniform allocation: same budget, per-layer p from the
+    # Hessian-trace saliency of a dense calibration pass
+    stats = collect_hessian_stats(params, adapter, batches)
+    alloc = PrunePlan.uniform(
+        PruneConfig(method="thanos", p=0.5, block_size=64)
+    ).allocate_sparsity(stats, policy="hessian_trace", budget=0.5,
+                        p_min=0.1, p_max=0.9)
+    plans.append(("thanos trace-allocated Σp=0.5", alloc))
+
+    for tag, plan in plans:
+        pruned, report = prune_model(params, adapter, batches, plan)
         loss = heldout_loss(model, pruned, cfg)
-        print(f"{tag:32s} sparsity={report.mean_sparsity():.3f} "
+        print(f"{tag:36s} sparsity={report.mean_sparsity():.3f} "
               f"CE={loss:.4f} (Δ{loss - dense:+.4f}) "
               f"[{report.seconds:.1f}s]")
+
+    # per-rule attribution of the last (allocated) run
+    print("\nper-rule rollup of the allocated run:")
+    for row in report.rule_rollup():
+        print(f"  rule {row['rule']:3d} {row['tag']:24s} "
+              f"layers={row['layers']:3d} "
+              f"sparsity={row['mean_sparsity']:.3f}")
 
 
 if __name__ == "__main__":

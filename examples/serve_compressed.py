@@ -1,23 +1,30 @@
-"""Serve a Thanos-2:4-pruned model from the compressed representation.
+"""Serve a mixed-recipe-pruned model with per-layer residency.
 
-Demonstrates the paper-§4.8 serving path: prune → pack (values + in-group
-indices) → batched wave serving.  Greedy outputs are bit-identical to the
-dense pruned model (compression is lossless); the HBM win is quantified by
-``python -m benchmarks.nm_decode_roofline``.
+Demonstrates the paper-§4.8 serving path driven by a ``PrunePlan``
+(DESIGN.md §11): a mixed recipe prunes MLPs 2:4 and attention
+unstructured-0.5 while embeddings stay dense; ``compress_params(...,
+plan=report.plan)`` packs only the 2:4 layers, so the engine holds a tree
+that is NmCompressed for MLPs and plain dense kernels everywhere else.
+Greedy outputs are bit-identical to the dense pruned model (compression is
+lossless); the run round-trips through the report JSON artifact.
 
     PYTHONPATH=src python examples/serve_compressed.py
 """
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core import PruneConfig, prune_model
+from repro.core import NmCompressed, PrunePlan, prune_model
 from repro.data.pipeline import calibration_batches
 from repro.models.model_builder import ModelAdapter, build_model
 from repro.serve import Request, ServeConfig, ServingEngine
 from repro.serve.compressed import compress_params, compressed_bytes
+
+RECIPES = os.path.join(os.path.dirname(__file__), "recipes")
 
 
 def main():
@@ -25,18 +32,30 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    plan = PrunePlan.load(os.path.join(RECIPES, "mixed_2to4_serve.json"))
     batches = calibration_batches(cfg, num_samples=16, seq_len=64, batch=8)
-    pruned, report = prune_model(
-        params, ModelAdapter(model), batches,
-        PruneConfig(method="thanos", pattern="nm", n=2, m=4, block_size=64))
-    packed = compress_params(pruned, report.masks, 2, 4)
+    pruned, report = prune_model(params, ModelAdapter(model), batches, plan)
+    for row in report.rule_rollup():
+        print(f"rule {row['rule']:3d} {str(row['match']):20s} "
+              f"{row['tag']:20s} layers={row['layers']:3d} "
+              f"sparsity={row['mean_sparsity']:.3f}")
+
+    # the report JSON embeds the plan — the run is reproducible from it
+    art = json.loads(report.to_json())
+    assert PrunePlan.from_dict(art["plan"]) == plan
+
+    packed = compress_params(pruned, report.masks, plan=report.plan)
     comp, dense = compressed_bytes(packed)
-    print(f"compressed linears: {comp / 1e6:.2f} MB "
-          f"({comp / dense:.3f} of dense)")
+    n_comp = sum(isinstance(l, NmCompressed)
+                 for l in jax.tree.leaves(
+                     packed, is_leaf=lambda x: isinstance(x, NmCompressed)))
+    print(f"compressed {n_comp} layers: {comp / 1e6:.2f} MB "
+          f"({comp / dense:.3f} of their dense bytes); "
+          f"attention/embeddings stay dense")
 
     rng = np.random.default_rng(0)
     outs = {}
-    for tag, p in (("dense-pruned", pruned), ("compressed", packed)):
+    for tag, p in (("dense-pruned", pruned), ("mixed-compressed", packed)):
         engine = ServingEngine(model, p,
                                ServeConfig(batch_slots=4, max_len=48))
         for uid in range(6):
@@ -48,8 +67,8 @@ def main():
         print(f"{tag}: {sum(len(r.out) for r in done)} tokens "
               f"in {time.perf_counter() - t0:.2f}s")
         outs[tag] = [r.out for r in done]
-    assert outs["dense-pruned"] == outs["compressed"]
-    print("greedy outputs identical ✓")
+    assert outs["dense-pruned"] == outs["mixed-compressed"]
+    print("greedy outputs identical ✓ (per-layer residency is lossless)")
 
 
 if __name__ == "__main__":

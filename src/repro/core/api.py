@@ -1,13 +1,23 @@
-"""Public pruning API — config dataclass + per-layer dispatch.
+"""Public pruning API — config dataclass + pluggable method/pattern registry.
 
 The paper's layout convention is followed throughout core/: ``W ∈ R^{c×b}``
 with rows = outputs and columns = inputs (the Hessian lives on the input
 dimension b).  Model kernels in this codebase are stored (in, out); the
 model-level driver in core/schedule.py does the transposes.
+
+Methods are *registered*, not hard-coded: ``register_method(name, {pattern:
+fn})`` makes a new pruning method available to ``prune_layer``, the
+``PruneConfig`` validator, every CLI (launch/prune.py derives its argparse
+choices from ``METHODS``/``PATTERNS``) and the recipe layer (core/plan.py)
+without touching this module.  ``METHODS`` and ``PATTERNS`` are live views
+over the registry, so ``"thanos" in METHODS`` / ``list(PATTERNS)`` keep
+working as they did when they were tuples — and reflect third-party
+registrations immediately.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Iterator, Mapping, Sequence
 
 import jax
 
@@ -17,8 +27,96 @@ from repro.core.thanos import PruneResult
 
 Array = jax.Array
 
-METHODS = ("thanos", "sparsegpt", "wanda", "magnitude")
-PATTERNS = ("unstructured", "nm", "structured")
+# fn(w, h, cfg) -> PruneResult; w is (c, b) paper layout, h is H = 2XXᵀ
+# (b, b) or None for data-free methods.
+PatternFn = Callable[[Array, "Array | None", "PruneConfig"], PruneResult]
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """One registered pruning method: its per-pattern solvers + traits."""
+
+    name: str
+    patterns: Mapping[str, PatternFn]
+    data_aware: bool = True      # True → prune_layer demands a Hessian
+
+
+class _RegistryView(Sequence):
+    """Tuple-like live view over registry keys (insertion-ordered)."""
+
+    def __init__(self, mapping: Mapping):
+        self._mapping = mapping
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._mapping)
+
+    def __contains__(self, item) -> bool:
+        return item in self._mapping
+
+    def __len__(self) -> int:
+        return len(self._mapping)
+
+    def __getitem__(self, i):
+        return tuple(self._mapping)[i]
+
+    def __eq__(self, other):
+        # mirror the old module-level tuples: equal to any sequence with
+        # the same elements, False (not TypeError) for everything else;
+        # unhashable because the registry is mutable
+        if isinstance(other, (_RegistryView, tuple, list)):
+            return tuple(self) == tuple(other)
+        return NotImplemented
+
+    __hash__ = None
+
+    def __repr__(self) -> str:
+        return repr(tuple(self._mapping))
+
+
+_REGISTRY: dict[str, MethodSpec] = {}
+_PATTERN_ORDER: dict[str, None] = {}     # insertion-ordered set of patterns
+
+METHODS = _RegistryView(_REGISTRY)
+PATTERNS = _RegistryView(_PATTERN_ORDER)
+
+
+def register_method(
+    name: str,
+    patterns: Mapping[str, PatternFn],
+    *,
+    data_aware: bool = True,
+    overwrite: bool = False,
+) -> MethodSpec:
+    """Register a pruning method under ``name``.
+
+    ``patterns`` maps sparsity-pattern names (e.g. "unstructured", "nm") to
+    ``fn(w, h, cfg) -> PruneResult`` solvers.  New pattern names are
+    appended to the global ``PATTERNS`` view in first-seen order.
+    """
+    if not patterns:
+        raise ValueError(f"method {name!r}: at least one pattern required")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"method {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    spec = MethodSpec(name=name, patterns=dict(patterns),
+                      data_aware=data_aware)
+    _REGISTRY[name] = spec
+    for p in patterns:
+        _PATTERN_ORDER.setdefault(p, None)
+    return spec
+
+
+def unregister_method(name: str) -> None:
+    """Remove a registered method (pattern names stay in ``PATTERNS``)."""
+    _REGISTRY.pop(name, None)
+
+
+def method_spec(name: str) -> MethodSpec:
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown method {name!r}; registered: {tuple(_REGISTRY)}")
+    return spec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,64 +134,64 @@ class PruneConfig:
     row_chunk: int = 0          # Appendix H.2 vertical chunking
 
     def __post_init__(self):
-        assert self.method in METHODS, self.method
-        assert self.pattern in PATTERNS, self.pattern
-        assert 0.0 <= self.p < 1.0
-        assert 0 < self.n < self.m
+        # ValueErrors, not asserts: validation must survive ``python -O``.
+        if self.method not in METHODS:
+            raise ValueError(
+                f"unknown method {self.method!r}; registered: "
+                f"{tuple(METHODS)}")
+        if self.pattern not in PATTERNS:
+            raise ValueError(
+                f"unknown pattern {self.pattern!r}; registered: "
+                f"{tuple(PATTERNS)}")
+        if not 0.0 <= self.p < 1.0:
+            raise ValueError(f"target sparsity p={self.p} must be in [0, 1)")
+        if not 0 < self.n < self.m:
+            raise ValueError(
+                f"n:m needs 0 < n < m, got n={self.n} m={self.m}")
+        if not self.percdamp > 0:
+            raise ValueError(
+                f"percdamp={self.percdamp} must be > 0 (Hessian damping)")
+        if not 0.0 <= self.alpha < 1.0:
+            raise ValueError(
+                f"outlier fraction alpha={self.alpha} must be in [0, 1)")
 
     def tag(self) -> str:
         pat = {"unstructured": f"p{self.p}", "nm": f"{self.n}:{self.m}",
-               "structured": f"struct{self.p}"}[self.pattern]
+               "structured": f"struct{self.p}"}.get(self.pattern,
+                                                    self.pattern)
         a = f"_a{self.alpha}" if self.alpha else ""
         return f"{self.method}_{pat}{a}"
 
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "PruneConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown PruneConfig fields {sorted(unknown)}; "
+                f"known: {sorted(known)}")
+        return cls(**d)
+
 
 def prune_layer(w: Array, h: Array | None, cfg: PruneConfig) -> PruneResult:
-    """Prune one linear layer W (c, b) given its Hessian H = 2XXᵀ (b, b)."""
-    if cfg.method != "magnitude" and h is None:
+    """Prune one linear layer W (c, b) given its Hessian H = 2XXᵀ (b, b).
+
+    Thin registry lookup: the per-(method, pattern) solver registered via
+    ``register_method`` does the work.
+    """
+    spec = method_spec(cfg.method)
+    if spec.data_aware and h is None:
         raise ValueError(f"{cfg.method} is data-aware: Hessian required")
-
-    if cfg.method == "thanos":
-        if cfg.pattern == "unstructured":
-            return thanos.prune_unstructured(
-                w, h, p=cfg.p, block_size=cfg.block_size,
-                percdamp=cfg.percdamp, row_chunk=cfg.row_chunk, alpha=cfg.alpha,
-            )
-        if cfg.pattern == "nm":
-            return thanos.prune_nm(
-                w, h, n=cfg.n, m=cfg.m, block_size=cfg.block_size,
-                percdamp=cfg.percdamp, row_chunk=cfg.row_chunk, alpha=cfg.alpha,
-            )
-        return thanos.prune_structured(
-            w, h, p=cfg.p, alpha=cfg.alpha, percdamp=cfg.percdamp
-        )
-
-    if cfg.method == "sparsegpt":
-        if cfg.pattern == "unstructured":
-            return sparsegpt.prune_unstructured(
-                w, h, p=cfg.p, mask_blocksize=cfg.block_size,
-                percdamp=cfg.percdamp,
-            )
-        if cfg.pattern == "nm":
-            return sparsegpt.prune_nm(w, h, n=cfg.n, m=cfg.m,
-                                      blocksize=cfg.block_size,
-                                      percdamp=cfg.percdamp)
-        return sparsegpt.prune_structured(w, h, p=cfg.p,
-                                          blocksize=cfg.block_size,
-                                          percdamp=cfg.percdamp)
-
-    if cfg.method == "wanda":
-        if cfg.pattern == "unstructured":
-            return wanda.prune_unstructured(w, h, p=cfg.p)
-        if cfg.pattern == "nm":
-            return wanda.prune_nm(w, h, n=cfg.n, m=cfg.m)
-        return wanda.prune_structured(w, h, p=cfg.p)
-
-    if cfg.pattern == "unstructured":
-        return magnitude.prune_unstructured(w, p=cfg.p)
-    if cfg.pattern == "nm":
-        return magnitude.prune_nm(w, n=cfg.n, m=cfg.m)
-    return magnitude.prune_structured(w, p=cfg.p)
+    fn = spec.patterns.get(cfg.pattern)
+    if fn is None:
+        raise ValueError(
+            f"method {cfg.method!r} does not support pattern "
+            f"{cfg.pattern!r}; supported: {tuple(spec.patterns)}")
+    return fn(w, h, cfg)
 
 
 def reconstruction_error(w0: Array, w1: Array, h: Array) -> Array:
@@ -102,3 +200,40 @@ def reconstruction_error(w0: Array, w1: Array, h: Array) -> Array:
 
     d = (w1 - w0).astype(jnp.float32)
     return jnp.einsum("ib,bk,ik->", d, 0.5 * h.astype(jnp.float32), d)
+
+
+# --------------------------------------------------------------------------
+# built-in registrations (the paper's method + the three baselines)
+# --------------------------------------------------------------------------
+register_method("thanos", {
+    "unstructured": lambda w, h, cfg: thanos.prune_unstructured(
+        w, h, p=cfg.p, block_size=cfg.block_size, percdamp=cfg.percdamp,
+        row_chunk=cfg.row_chunk, alpha=cfg.alpha),
+    "nm": lambda w, h, cfg: thanos.prune_nm(
+        w, h, n=cfg.n, m=cfg.m, block_size=cfg.block_size,
+        percdamp=cfg.percdamp, row_chunk=cfg.row_chunk, alpha=cfg.alpha),
+    "structured": lambda w, h, cfg: thanos.prune_structured(
+        w, h, p=cfg.p, alpha=cfg.alpha, percdamp=cfg.percdamp),
+})
+
+register_method("sparsegpt", {
+    "unstructured": lambda w, h, cfg: sparsegpt.prune_unstructured(
+        w, h, p=cfg.p, mask_blocksize=cfg.block_size, percdamp=cfg.percdamp),
+    "nm": lambda w, h, cfg: sparsegpt.prune_nm(
+        w, h, n=cfg.n, m=cfg.m, blocksize=cfg.block_size,
+        percdamp=cfg.percdamp),
+    "structured": lambda w, h, cfg: sparsegpt.prune_structured(
+        w, h, p=cfg.p, blocksize=cfg.block_size, percdamp=cfg.percdamp),
+})
+
+register_method("wanda", {
+    "unstructured": lambda w, h, cfg: wanda.prune_unstructured(w, h, p=cfg.p),
+    "nm": lambda w, h, cfg: wanda.prune_nm(w, h, n=cfg.n, m=cfg.m),
+    "structured": lambda w, h, cfg: wanda.prune_structured(w, h, p=cfg.p),
+})
+
+register_method("magnitude", {
+    "unstructured": lambda w, h, cfg: magnitude.prune_unstructured(w, p=cfg.p),
+    "nm": lambda w, h, cfg: magnitude.prune_nm(w, n=cfg.n, m=cfg.m),
+    "structured": lambda w, h, cfg: magnitude.prune_structured(w, p=cfg.p),
+}, data_aware=False)

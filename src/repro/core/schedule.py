@@ -6,12 +6,19 @@ prunable linear layer*, accumulate per-layer Hessians ``2XXᵀ``, prune every
 linear independently, then (pass 2) re-forward through the *pruned* block to
 produce the next block's inputs.  Exactly two forward passes per block.
 
+Which cell prunes which layer is a ``PrunePlan`` (core/plan.py): every
+param path resolves through the plan's ordered rules to a ``PruneConfig``
+or to *skip* (the layer stays dense and its Hessian is freed).  Passing a
+bare ``PruneConfig`` is the compat shim — it behaves bit-exactly like
+``PrunePlan.uniform(cfg)``.
+
 Models plug in via the ``BlockwiseAdapter`` protocol (implemented once,
 generically, over the model zoo in models/adapter.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Any, Callable, Iterable, Protocol
 
@@ -20,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.api import PruneConfig, prune_layer
 from repro.core.hessian import HessianAccumulator
+from repro.core.plan import LayerStat, PrunePlan, as_plan, path_str
 
 Array = jax.Array
 Path = tuple[Any, ...]
@@ -78,6 +86,10 @@ class LayerReport:
     sparsity: float
     obs_loss: float
     seconds: float
+    rule: int = -1          # index of the PrunePlan rule that claimed it
+    tag: str = ""           # resolved PruneConfig.tag(), or "skip"
+    params: int = 0         # kernel parameter count (rollup weighting)
+    skipped: bool = False   # True = rule said dense / no rule matched
 
 
 @dataclasses.dataclass
@@ -85,25 +97,93 @@ class PruneReport:
     layers: list[LayerReport]
     masks: dict[Path, Array]
     seconds: float
+    plan: PrunePlan | None = None
 
     def mean_sparsity(self) -> float:
         tot = sum(m.size for m in self.masks.values())
         ones = sum(float(jnp.sum(m)) for m in self.masks.values())
         return ones / max(tot, 1)
 
+    def rule_rollup(self) -> list[dict]:
+        """Per-rule attribution: which rule claimed which layers, with a
+        size-weighted sparsity / summed-loss rollup.  Rule -1 collects
+        layers no rule matched (skipped)."""
+        by_rule: dict[int, list[LayerReport]] = {}
+        for rep in self.layers:
+            by_rule.setdefault(rep.rule, []).append(rep)
+        out = []
+        for idx in sorted(by_rule):
+            reps = by_rule[idx]
+            rule = (self.plan.rules[idx]
+                    if self.plan is not None and 0 <= idx < len(self.plan.rules)
+                    else None)
+            size = sum(r.params for r in reps)
+            out.append({
+                "rule": idx,
+                "match": rule.match if rule else None,
+                "action": ("skip" if rule is None or rule.skip else "prune"),
+                "tag": (rule.cfg.tag() if rule is not None
+                        and rule.cfg is not None else "skip"),
+                "layers": len(reps),
+                "params": size,
+                "mean_sparsity": (sum(r.params * r.sparsity for r in reps)
+                                  / size if size else 0.0),
+                "obs_loss": sum(r.obs_loss for r in reps),
+                "seconds": sum(r.seconds for r in reps),
+            })
+        return out
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        """JSON-able artifact: the embedded plan makes the run reproducible
+        (``PrunePlan.from_dict(report['plan'])``); masks are arrays and
+        stay out."""
+        return {
+            "plan": None if self.plan is None else self.plan.to_dict(),
+            "seconds": self.seconds,
+            "mean_sparsity": self.mean_sparsity(),
+            "rules": self.rule_rollup(),
+            "layers": [{
+                "path": path_str(r.path),
+                "rule": r.rule,
+                "tag": r.tag,
+                "skipped": r.skipped,
+                "sparsity": r.sparsity,
+                "obs_loss": r.obs_loss,
+                "params": r.params,
+                "seconds": r.seconds,
+            } for r in self.layers],
+        }
+
+    def to_json(self, *, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
 
 def prune_model(
     params,
     adapter: BlockwiseAdapter,
     batches: Iterable[Any],
-    cfg: PruneConfig,
+    plan: "PrunePlan | PruneConfig",
     *,
     keep_masks: bool = True,
     progress: Callable[[str], None] | None = None,
 ) -> tuple[Any, PruneReport]:
-    """Run Alg. 3 over the whole model.  Returns (pruned params, report)."""
+    """Run Alg. 3 over the whole model.  Returns (pruned params, report).
+
+    ``plan`` may be a ``PrunePlan`` (per-layer rules) or a bare
+    ``PruneConfig`` (compat shim ≡ ``PrunePlan.uniform(cfg)``).
+    """
+    plan = as_plan(plan)
     t_start = time.perf_counter()
     batches = list(batches)
+    if plan.allocation is not None:
+        # a recipe carrying an allocation block expands itself here: one
+        # extra dense calibration pass collects the per-layer Hessian-trace
+        # stats, and the *expanded* plan (allocation=None) is what the
+        # report embeds — replaying the artifact reproduces this run
+        # without re-running the allocation.
+        plan = plan.allocate_sparsity(
+            collect_hessian_stats(params, adapter, batches))
     carries = [adapter.prepare(params, b) for b in batches]
 
     block_fwd = jax.jit(
@@ -129,6 +209,8 @@ def prune_model(
         for carry in carries:
             _, caps = block_cap(params, carry, i)
             for path, x in caps.items():
+                if path not in accs and plan.cfg_for(path) is None:
+                    continue                 # skip rule: layer stays dense
                 if path not in accs:
                     accs[path] = HessianAccumulator.init(x.shape[-1])
                 accs[path] = accs[path].update(x)
@@ -137,6 +219,19 @@ def prune_model(
         for path in adapter.block_linear_paths(params, i):
             t0 = time.perf_counter()
             kernel = get_path(params, path)          # (in, out)
+            rule_idx, cfg = plan.resolve(path)
+            if cfg is None:                          # dense: skip + free H
+                accs.pop(path, None)
+                rep = LayerReport(
+                    path=path, sparsity=0.0, obs_loss=0.0,
+                    seconds=time.perf_counter() - t0, rule=rule_idx,
+                    tag="skip", params=int(kernel.size), skipped=True,
+                )
+                reports.append(rep)
+                if progress:
+                    progress(f"block {i} {path_str(path)}: skipped "
+                             f"(rule {rule_idx})")
+                continue
             h = accs[path].finalize() if path in accs else None
             res = prune_layer(kernel.T, h, cfg)      # paper layout (out, in)
             accs.pop(path, None)                     # free the Hessian
@@ -148,15 +243,61 @@ def prune_model(
                 sparsity=float(jnp.mean(res.mask)),
                 obs_loss=float(res.loss),
                 seconds=time.perf_counter() - t0,
+                rule=rule_idx,
+                tag=cfg.tag(),
+                params=int(kernel.size),
             )
             reports.append(rep)
             if progress:
-                progress(f"block {i} {'/'.join(map(str, path))}: "
+                progress(f"block {i} {path_str(path)}: "
                          f"sparsity={rep.sparsity:.3f} loss={rep.obs_loss:.3e}")
 
         # ---- pass 2: propagate through the pruned block -------------------
         carries = [block_fwd(params, carry, i) for carry in carries]
 
     return params, PruneReport(
-        layers=reports, masks=masks, seconds=time.perf_counter() - t_start
+        layers=reports, masks=masks, seconds=time.perf_counter() - t_start,
+        plan=plan,
     )
+
+
+def collect_hessian_stats(
+    params,
+    adapter: BlockwiseAdapter,
+    batches: Iterable[Any],
+) -> dict[str, LayerStat]:
+    """One dense calibration pass → {path_str: LayerStat(size, trace)}.
+
+    Runs Alg. 3's pass 1 (capture + Hessian accumulation) through the
+    *unpruned* model and reduces each layer's Hessian to its mean diagonal
+    mass tr(H)/b — the saliency proxy ``PrunePlan.allocate_sparsity``
+    consumes.  No pruning, no weight mutation; one forward pass per block.
+    """
+    batches = list(batches)
+    carries = [adapter.prepare(params, b) for b in batches]
+    block_cap = jax.jit(
+        lambda p, c, i: adapter.block_apply(p, i, c, capture=True),
+        static_argnums=(2,),
+    )
+    stats: dict[str, LayerStat] = {}
+    accs: dict[Path, HessianAccumulator] = {}
+    for i in range(adapter.num_blocks(params)):
+        next_carries = []
+        for carry in carries:
+            out, caps = block_cap(params, carry, i)
+            next_carries.append(out)
+            for path, x in caps.items():
+                if path not in accs:
+                    accs[path] = HessianAccumulator.init(x.shape[-1])
+                accs[path] = accs[path].update(x)
+        carries = next_carries
+        for path in adapter.block_linear_paths(params, i):
+            if path not in accs:
+                continue
+            h = accs.pop(path).finalize()
+            kernel = get_path(params, path)
+            stats[path_str(path)] = LayerStat(
+                size=int(kernel.size),
+                trace=float(jnp.trace(h)) / h.shape[0],
+            )
+    return stats

@@ -42,6 +42,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.api import PruneConfig, prune_layer
 from repro.core.hessian import HessianAccumulator
+from repro.core.plan import PrunePlan
 from repro.core.thanos import PruneResult
 from repro.dist.sharding import _entry, _size, data_axes
 
@@ -66,15 +67,32 @@ def row_partition(c: int, mesh: Mesh) -> tuple[str, ...]:
 
 
 def prune_layer_sharded(
-    w: Array, h: Array | None, cfg: PruneConfig, mesh: Mesh
+    w: Array, h: Array | None, cfg: "PruneConfig | PrunePlan", mesh: Mesh,
+    *, path: tuple | str = (),
 ) -> PruneResult:
     """Row-parallel ``prune_layer``: rows of W sharded over ``mesh``,
     Hessian replicated, per-row block-wise solves, loss psum'd.
+
+    ``cfg`` may be a ``PrunePlan``: the layer's ``path`` resolves through
+    the plan's rules to its cell, and a skip resolution returns the layer
+    untouched (zero mask, zero loss) without entering the shard_map.
 
     Bit-exact with single-device ``prune_layer`` on a 1×1 mesh for every
     method and pattern; n:m/structured masks stay bit-exact at any shard
     count (weights to float-reassociation tolerance).
     """
+    if isinstance(cfg, PrunePlan):
+        if cfg.allocation is not None:
+            raise ValueError(
+                "plan carries an unexpanded allocation block; expand it "
+                "first (plan.allocate_sparsity(collect_hessian_stats(...)))"
+                " — a single layer cannot run a model-level allocation")
+        cfg = cfg.cfg_for(path)
+        if cfg is None:                     # skip rule — layer stays dense
+            import jax.numpy as jnp
+
+            return PruneResult(w, jnp.zeros(w.shape, jnp.float32),
+                               jnp.zeros((), jnp.float32))
     c = w.shape[0]
     axes = row_partition(c, mesh)
     rows = P(_entry(axes), None)

@@ -266,6 +266,7 @@ def run_prune_parity() -> None:
     import jax.numpy as jnp
 
     from repro.core.api import PruneConfig, prune_layer
+    from repro.core.plan import PrunePlan, PruneRule
     from repro.dist.prune import prune_layer_sharded, row_partition
     from repro.dist.sharding import _size
 
@@ -279,9 +280,19 @@ def run_prune_parity() -> None:
     shards = _size(mesh, row_partition(c, mesh))
     assert shards > 1, f"parity run must be >1-shard, got {shards}"
 
+    # the sharded side resolves its cell through a PrunePlan (skip rule +
+    # n:m rule — the recipe path the real drivers take); the local oracle
+    # runs the bare cfg, so this also pins plan-resolution ≡ direct-cfg
     cfg = PruneConfig(method="thanos", pattern="nm", n=2, m=4, block_size=32)
+    plan = PrunePlan(rules=(
+        PruneRule(match="embed*", cfg=None, name="skip"),
+        PruneRule(match="blocks/*", cfg=cfg),
+    ))
+    path = ("blocks", 0, "mlp", "up", "w")
     local = prune_layer(w, h, cfg)
-    sharded = prune_layer_sharded(w, h, cfg, mesh)
+    sharded = prune_layer_sharded(w, h, plan, mesh, path=path)
+    skipped = prune_layer_sharded(w, h, plan, mesh, path=("embed", "table"))
+    assert float(jnp.sum(skipped.mask)) == 0.0, "skip rule must stay dense"
 
     np.testing.assert_array_equal(np.asarray(local.mask),
                                   np.asarray(sharded.mask))
@@ -291,7 +302,7 @@ def run_prune_parity() -> None:
     np.testing.assert_allclose(float(local.loss), float(sharded.loss),
                                rtol=1e-5)
     print(f"PRUNE-PARITY OK shards={shards} c={c} b={b} "
-          f"pattern=2:4 mask=bit-exact")
+          f"pattern=2:4 (via plan) mask=bit-exact")
 
 
 def main():

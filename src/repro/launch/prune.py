@@ -5,6 +5,15 @@
 
 Runs: synthetic calibration → block-wise Hessian capture → per-layer pruning
 → held-out loss before/after (the perplexity-proxy comparison of Table 2).
+
+Recipes: ``--plan recipe.json`` drives the whole run from a ``PrunePlan``
+(per-layer rules, skip rules, optional sparsity allocation — DESIGN.md
+§11).  Without a file, ``--skip GLOB`` / ``--mlp-pattern`` /
+``--attn-pattern`` build a mixed plan from the base cell on the command
+line; with none of those flags the run uses the bare-PruneConfig compat
+shim (≡ ``PrunePlan.uniform``).  ``--method``/``--pattern`` choices come
+straight from the ``core`` registry, so ``register_method`` extensions
+appear here automatically.
 """
 from __future__ import annotations
 
@@ -14,15 +23,23 @@ import json
 import jax
 
 from repro.configs import registry
-from repro.core import PruneConfig, prune_model
+from repro.core import (
+    METHODS, PATTERNS, PruneConfig, PrunePlan, PruneRule, as_plan,
+    prune_model,
+)
 from repro.data.pipeline import calibration_batches, heldout_loss
 from repro.models.model_builder import build_model, ModelAdapter
 
+# transformer-family shorthand globs ('*' crosses '/'); moe covers both the
+# stacked expert slices and the shared FFN
+MLP_GLOBS = ("*/mlp/*", "*/moe/*")
+ATTN_GLOBS = ("*/attn/*",)
+
 
 def prune_arch(
-    arch: str, cfg_prune: PruneConfig, *, reduced: bool = True,
+    arch: str, plan: "PrunePlan | PruneConfig", *, reduced: bool = True,
     num_samples: int = 16, seq_len: int = 128, batch: int = 8,
-    log=print,
+    report_path: str = "", log=print,
 ):
     cfg = registry.get_config(arch, reduced=reduced)
     model = build_model(cfg)
@@ -33,46 +50,99 @@ def prune_arch(
         cfg, num_samples=num_samples, seq_len=seq_len, batch=batch
     )
     adapter = ModelAdapter(model)
-    pruned, report = prune_model(params, adapter, batches, cfg_prune,
+    # a recipe with an allocation block is expanded inside prune_model
+    # (one extra dense calibration pass); report.plan is the expanded plan
+    pruned, report = prune_model(params, adapter, batches, plan,
                                  progress=None)
     pruned_loss = heldout_loss(model, pruned, cfg)
     out = {
         "arch": arch,
-        "config": cfg_prune.tag(),
+        "config": (plan.tag() if isinstance(plan, PruneConfig)
+                   else f"plan[{len(as_plan(plan).rules)} rules]"),
         "dense_loss": dense_loss,
         "pruned_loss": pruned_loss,
         "delta": pruned_loss - dense_loss,
         "mean_sparsity": report.mean_sparsity(),
         "prune_seconds": report.seconds,
-        "layers_pruned": len(report.layers),
+        "layers_pruned": sum(1 for r in report.layers if not r.skipped),
+        "layers_skipped": sum(1 for r in report.layers if r.skipped),
+        "rules": report.rule_rollup(),
     }
+    if report_path:
+        with open(report_path, "w") as f:
+            f.write(report.to_json())
+            f.write("\n")
+        out["report"] = report_path
     if log:
         log(json.dumps(out, indent=1))
     return pruned, report, out
+
+
+def build_plan(args) -> "PrunePlan | PruneConfig":
+    """CLI flags → plan (or the bare-config compat shim).
+
+    Precedence: ``--plan recipe.json`` wins outright.  Otherwise the base
+    method/pattern/… flags define a catch-all cell; ``--skip`` globs
+    prepend skip rules and ``--mlp-pattern``/``--attn-pattern`` prepend
+    transformer-family rules that reuse the base cell's hyperparameters
+    with a different sparsity pattern.  First match wins, so skips
+    outrank the shorthands, which outrank the catch-all.
+    """
+    if args.plan:
+        return PrunePlan.load(args.plan)
+
+    def cell(pattern: str) -> PruneConfig:
+        return PruneConfig(
+            method=args.method, pattern=pattern, p=args.p,
+            n=args.n, m=args.m, alpha=args.alpha, block_size=args.block_size,
+        )
+
+    base = cell(args.pattern)
+    rules = [PruneRule(match=g, cfg=None, name="skip") for g in args.skip]
+    if args.mlp_pattern:
+        rules += [PruneRule(match=g, cfg=cell(args.mlp_pattern), name="mlp")
+                  for g in MLP_GLOBS]
+    if args.attn_pattern:
+        rules += [PruneRule(match=g, cfg=cell(args.attn_pattern),
+                            name="attn") for g in ATTN_GLOBS]
+    if not rules:
+        return base                     # compat shim: bare PruneConfig
+    return PrunePlan(rules=(*rules, PruneRule(match="*", cfg=base)))
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b",
                     choices=list(registry.ARCHS))
-    ap.add_argument("--method", default="thanos",
-                    choices=["thanos", "sparsegpt", "wanda", "magnitude"])
+    # choices derive from the live registry (core.METHODS / core.PATTERNS):
+    # third-party register_method() calls surface here with no CLI edits
+    ap.add_argument("--method", default="thanos", choices=list(METHODS))
     ap.add_argument("--pattern", default="unstructured",
-                    choices=["unstructured", "nm", "structured"])
+                    choices=list(PATTERNS))
     ap.add_argument("--p", type=float, default=0.5)
     ap.add_argument("--n", type=int, default=2)
     ap.add_argument("--m", type=int, default=4)
     ap.add_argument("--alpha", type=float, default=0.0)
     ap.add_argument("--block-size", type=int, default=64)
+    ap.add_argument("--plan", default="",
+                    help="PrunePlan recipe JSON (overrides the cell flags)")
+    ap.add_argument("--skip", action="append", default=[], metavar="GLOB",
+                    help="leave matching layers dense (repeatable; "
+                         "prepended as skip rules)")
+    ap.add_argument("--mlp-pattern", default="", choices=["", *PATTERNS],
+                    help="sparsity pattern for MLP/MoE linears "
+                         "(base cell hyperparameters)")
+    ap.add_argument("--attn-pattern", default="", choices=["", *PATTERNS],
+                    help="sparsity pattern for attention linears")
+    ap.add_argument("--report", default="",
+                    help="write the PruneReport JSON (embeds the plan) here")
     ap.add_argument("--full", action="store_true",
                     help="full config (needs real accelerators)")
     args = ap.parse_args()
 
-    cfgp = PruneConfig(
-        method=args.method, pattern=args.pattern, p=args.p,
-        n=args.n, m=args.m, alpha=args.alpha, block_size=args.block_size,
-    )
-    prune_arch(args.arch, cfgp, reduced=not args.full)
+    plan = build_plan(args)
+    prune_arch(args.arch, plan, reduced=not args.full,
+               report_path=args.report)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,11 @@ checkpoint.
 
 ``--nm`` prunes 2:4 with Thanos first and serves from the NmCompressed
 representation (paper §4.8; HBM-traffic win quantified in
-benchmarks/nm_decode_roofline.py).
+benchmarks/nm_decode_roofline.py).  ``--plan recipe.json`` prunes with a
+``PrunePlan`` instead and serves with *per-layer residency*: paths whose
+cell is n:m stay NmCompressed, everything else (unstructured cells, skip
+rules) stays dense (DESIGN.md §11; try
+examples/recipes/mixed_2to4_serve.json).
 """
 from __future__ import annotations
 
@@ -17,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry
-from repro.core import PruneConfig
+from repro.core import PruneConfig, PrunePlan
 from repro.models.model_builder import build_model
 from repro.serve import Request, ServeConfig, ServingEngine
 from repro.serve.compressed import compress_params, compressed_bytes
@@ -37,6 +41,9 @@ def main():
                          "legacy wave scheduler")
     ap.add_argument("--nm", action="store_true",
                     help="Thanos-prune 2:4 and serve compressed-resident")
+    ap.add_argument("--plan", default="",
+                    help="PrunePlan recipe: prune per-layer and serve with "
+                         "mixed dense/NmCompressed residency")
     ap.add_argument("--nm-impl", default="",
                     choices=["", "auto", "ref", "pallas"],
                     help="compressed matmul impl (default: backend auto)")
@@ -48,7 +55,22 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    if args.nm:
+    if args.plan:
+        from repro.launch.prune import prune_arch
+
+        plan = PrunePlan.load(args.plan)
+        print(f"pruning with recipe {args.plan} ({len(plan.rules)} rules)…")
+        pruned, report, _ = prune_arch(args.arch, plan, log=None)
+        params = compress_params(pruned, report.masks, plan=report.plan)
+        comp, dense = compressed_bytes(params)
+        if dense:
+            print(f"compressed weight bytes: {comp / dense:.3f} of their "
+                  f"dense bytes (non-n:m cells stay dense)")
+        for row in report.rule_rollup():
+            print(f"  rule {row['rule']:3d} {str(row['match']):20s} "
+                  f"{row['tag']:18s} layers={row['layers']:3d} "
+                  f"sparsity={row['mean_sparsity']:.3f}")
+    elif args.nm:
         from repro.launch.prune import prune_arch
 
         print("pruning 2:4 with Thanos first…")

@@ -328,11 +328,21 @@ class DecodeOptions:
     cross_cache: bool = False   # enc-dec: precomputed per-layer cross-KV
 
 
-def abstract_nm_params(model, n: int, m: int):
-    """Abstract params with every prunable 2-D linear swapped for an
-    NmCompressed ShapeDtypeStruct pair (3-D expert stacks kept dense —
-    per-expert compression is a straightforward extension)."""
+def abstract_nm_params(model, n: int | None = None, m: int | None = None,
+                       *, plan=None):
+    """Abstract params with prunable 2-D linears swapped for NmCompressed
+    ShapeDtypeStruct pairs (3-D expert stacks kept dense — per-expert
+    compression is a straightforward extension).
+
+    With a global ``(n, m)`` every eligible linear compresses; with a
+    ``PrunePlan`` each path resolves through the plan's rules and only
+    paths whose cell has pattern "nm" compress, with *their own* (n, m) —
+    mixed dense/compressed residency lowers with per-layer geometry.
+    """
     from repro.core.sparsity import NmCompressed
+
+    if plan is None and (n is None or m is None):
+        raise ValueError("abstract_nm_params needs (n, m) or plan=")
 
     a = abstract_params(model)
     paths = []
@@ -344,18 +354,25 @@ def abstract_nm_params(model, n: int, m: int):
     for path in paths:
         if isinstance(path[-1], int):     # expert slice — skip (stays dense)
             continue
+        if plan is not None:
+            cfg = plan.cfg_for(path)
+            if cfg is None or cfg.pattern != "nm":
+                continue                  # dense under this plan
+            pn, pm = cfg.n, cfg.m
+        else:
+            pn, pm = n, m
         kernel = get_path(a, path)
         if kernel.ndim != 2:
             continue
         d_in, d_out = kernel.shape
-        if d_in % m:
+        if d_in % pm:
             continue
-        keep = m - n
-        gk = d_in // m * keep
+        keep = pm - pn
+        gk = d_in // pm * keep
         packed = NmCompressed(
             values=jax.ShapeDtypeStruct((d_out, gk), kernel.dtype),
             indices=jax.ShapeDtypeStruct((d_out, (gk + 1) // 2), jnp.int8),
-            n=n, m=m, b=d_in, idx_bits=4,
+            n=pn, m=pm, b=d_in, idx_bits=4,
         )
         a = set_path(a, path[:-1] + ("w",), packed)
     return a

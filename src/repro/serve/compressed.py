@@ -17,28 +17,52 @@ from typing import Any
 
 import jax.numpy as jnp
 
+from repro.core.plan import PrunePlan
 from repro.core.schedule import get_path, set_path
 from repro.core.sparsity import NmCompressed, pack_nm, unpack_nm
 
 
-def compress_params(params, masks: dict[tuple, Any], n: int, m: int, *,
+def compress_params(params, masks: dict[tuple, Any], n: int | None = None,
+                    m: int | None = None, *, plan: PrunePlan | None = None,
                     idx_bits: int = 4):
-    """Replace every masked (in, out) kernel with NmCompressed.
+    """Replace masked (in, out) kernels with NmCompressed.
 
     Masks are keyed by param path (core/schedule.py layout, mask 1.0 =
     pruned, stored (in, out) like the kernel).  The paper's layout is
     (out=c, in=b) with n:m groups along the *input* dim b, so we transpose
     into paper layout before packing.
+
+    Two calling modes:
+
+    * global ``(n, m)`` — every masked kernel packs with that cell (the
+      pre-plan API);
+    * ``plan=`` (e.g. ``report.plan``) — each path resolves through the
+      plan's rules: paths whose cell has pattern "nm" pack with *their own*
+      (n, m); every other path (unstructured/structured cells, skip rules)
+      stays dense.  That is the mixed-residency serving artifact — the
+      engine streams NmCompressed leaves through the n:m kernel and dense
+      leaves through plain matmuls, per layer.
     """
+    if plan is None and (n is None or m is None):
+        raise ValueError("compress_params needs (n, m) or plan=")
     out = params
     for path, mask in masks.items():
-        if isinstance(path[-1], int):   # stacked expert slice
-            kernel = get_path(params, path[:-1])[path[-1]]
+        if isinstance(path[-1], int):
+            # stacked expert slice: an NmCompressed cannot live inside an
+            # (E, in, out) array leaf, so expert slices stay dense — same
+            # contract as launch/steps.abstract_nm_params (ROADMAP item)
+            continue
+        if plan is not None:
+            cfg = plan.cfg_for(path)
+            if cfg is None or cfg.pattern != "nm":
+                continue                   # stays dense in the serve tree
+            pn, pm = cfg.n, cfg.m
         else:
-            kernel = get_path(params, path)
+            pn, pm = n, m
+        kernel = get_path(params, path)
         w_cb = kernel.T                    # (out, in) = (c, b)
         m_cb = mask.T
-        packed = pack_nm(w_cb, m_cb, n, m, idx_bits=idx_bits)
+        packed = pack_nm(w_cb, m_cb, pn, pm, idx_bits=idx_bits)
         out = set_path(out, path, packed)
     return out
 

@@ -35,9 +35,14 @@ preempted server resumes mid-generation with bit-identical continuations
 Compressed weights: pass params whose pruned linears are ``NmCompressed``
 (serve/compressed.py) — the engine keeps them **compressed-resident**: no
 ``decompress_params`` at load, prefill and decode stream the compressed
-bytes through kernels/ops.nm_matmul (paper §4.8).  Which kernel impl/tiles
-run is the ``ServeConfig`` nm_* knobs (falling back to the
-``build_model(..., nm_kernel=)`` config, then backend auto-dispatch).
+bytes through kernels/ops.nm_matmul (paper §4.8).  Mixed ``PrunePlan``
+residency needs no engine support beyond this: ``compress_params(...,
+plan=report.plan)`` leaves non-n:m layers as dense kernels, and each
+``NmCompressed`` leaf carries its own static (n, m, b, idx_bits), so a
+2:4-MLP / dense-attention tree decodes with per-layer geometry out of the
+box (tests/test_plan.py).  Which kernel impl/tiles run is the
+``ServeConfig`` nm_* knobs (falling back to the ``build_model(...,
+nm_kernel=)`` config, then backend auto-dispatch).
 """
 from __future__ import annotations
 
