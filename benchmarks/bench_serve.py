@@ -211,9 +211,16 @@ def _drive_trace(engine, trace) -> tuple[float, list]:
     return time.perf_counter() - t0, reqs
 
 
+TRACE_PAGE_SIZE = 16
+
+
 def run_trace(*, d: int, n_requests: int, slots: int, seed: int = 0,
-              verbose=True) -> list[dict]:
-    """Serve one trace with both schedulers on compressed-resident params."""
+              reps: int = 3, verbose=True) -> list[dict]:
+    """Serve one trace with both schedulers on compressed-resident params,
+    plus the paged KV engine (continuous scheduler, page-pool cache) on a
+    deliberately constrained pool — the trace's total context exceeds the
+    contiguous ``slots × max_len`` capacity, so paging is load-bearing, not
+    decorative.  All three must agree per-uid (greedy bit-parity)."""
     from repro.serve import ServeConfig, ServingEngine
 
     cfg = bench_config(d)
@@ -226,44 +233,93 @@ def run_trace(*, d: int, n_requests: int, slots: int, seed: int = 0,
     comp = compress_params(pruned, report.masks, 2, 4)
     trace = make_arrival_trace(seed, n_requests, cfg.vocab_size)
     max_len = max(TRACE_LENS) + max(MAX_NEW_MIX[0]) + 2
+    total_context = sum(len(t["prompt"]) + t["max_new"] for t in trace)
+
+    ps = TRACE_PAGE_SIZE
+    paged_max_len = max_len + (-max_len) % ps          # round up to pages
+    pps = paged_max_len // ps
+    # two pages short of full residency: faults/COW/preemption run for real
+    num_pages = max(1 + pps, 1 + slots * pps - 2)
+
+    def make_engine(variant):
+        paged = variant == "paged"
+        return ServingEngine(
+            model, comp,
+            ServeConfig(
+                batch_slots=slots,
+                max_len=paged_max_len if paged else max_len,
+                scheduler="continuous" if paged else variant,
+                paged=paged, page_size=ps,
+                num_pages=num_pages if paged else 0))
+
+    variants = ("continuous", "wave", "paged")
+    for variant in variants:                   # untimed warm-up/compile pass
+        _drive_trace(make_engine(variant), trace)
 
     rows, outs = [], {}
-    for scheduler in ("continuous", "wave"):
-        def engine():
-            return ServingEngine(
-                model, comp,
-                ServeConfig(batch_slots=slots, max_len=max_len,
-                            scheduler=scheduler))
-
-        _drive_trace(engine(), trace)              # untimed warm-up/compile
-        eng = engine()
-        wall, reqs = _drive_trace(eng, trace)
+    for variant in variants:
+        paged = variant == "paged"
+        runs = []                 # median-of-reps (same protocol as timeit)
+        for _ in range(max(1, reps)):
+            eng = make_engine(variant)
+            runs.append((_drive_trace(eng, trace), eng))
+        runs.sort(key=lambda r: r[0][0])
+        (wall, reqs), eng = runs[len(runs) // 2]
         st = eng.stats
         tokens = sum(len(r.out) for r in reqs)
+        # t_first < 0 ⇒ never scheduled (bug this sweep fixes: such
+        # requests used to silently vanish from the TTFT stats — and an
+        # all-unserved run crashed np.mean on an empty list)
         ttfts = [r.t_first - r.t_submit for r in reqs if r.t_first >= 0]
-        outs[scheduler] = {r.uid: list(r.out) for r in reqs}
-        rows.append({
-            "variant": f"trace_{scheduler}",
+        unserved = sum(1 for r in reqs if r.t_first < 0)
+        outs[variant] = {r.uid: list(r.out) for r in reqs}
+        row = {
+            "variant": f"trace_{variant}",
             "d_model": d, "batch_slots": slots, "requests": n_requests,
             "trace_seed": seed,
             "wall_s": wall,
             "tokens_per_s": tokens / wall,
-            "ttft_mean_s": float(np.mean(ttfts)),
-            "ttft_p90_s": float(np.quantile(ttfts, 0.9)),
+            "requests_per_s": n_requests / wall,
+            "unserved_requests": unserved,
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else None,
+            "ttft_p90_s": (float(np.quantile(ttfts, 0.9))
+                           if ttfts else None),
+            "ttft_p99_s": (float(np.quantile(ttfts, 0.99))
+                           if ttfts else None),
             "decode_steps": st["decode_steps"],
             "slot_occupancy": (st["busy_slot_steps"]
                                / max(1, st["decode_steps"] * slots)),
-        })
-    assert outs["continuous"] == outs["wave"], \
+        }
+        if paged:
+            row.update({
+                "page_size": ps, "num_pages": num_pages,
+                "cache_capacity_tokens": (num_pages - 1) * ps,
+                "contiguous_capacity_tokens": slots * max_len,
+                "trace_total_context_tokens": total_context,
+                "pages_hwm": st["pages_hwm"],
+                "page_faults": st["page_faults"],
+                "cow_copies": st["cow_copies"],
+                "prefix_hit_tokens": st["prefix_hit_tokens"],
+                "preemptions": st["preemptions"],
+            })
+        rows.append(row)
+    assert outs["continuous"] == outs["wave"] == outs["paged"], \
         "schedulers disagree on per-uid outputs"
     if verbose:
-        c, w = rows[0], rows[1]
-        print(f"trace d={d} slots={slots} n={n_requests}: "
-              f"continuous {c['tokens_per_s']:7.1f} tok/s "
-              f"ttft {c['ttft_mean_s']*1e3:6.1f} ms | "
-              f"wave {w['tokens_per_s']:7.1f} tok/s "
-              f"ttft {w['ttft_mean_s']*1e3:6.1f} ms | "
-              f"speedup {c['tokens_per_s']/w['tokens_per_s']:.2f}x",
+        c, w, p = rows
+        print(f"trace d={d} slots={slots} n={n_requests} "
+              f"(context {total_context} tok > contiguous "
+              f"{slots * max_len} tok):", flush=True)
+        for r in (c, w, p):
+            ttft = (f"{r['ttft_mean_s']*1e3:6.1f}"
+                    if r["ttft_mean_s"] is not None else "   n/a")
+            print(f"  {r['variant']:18s} {r['tokens_per_s']:7.1f} tok/s  "
+                  f"ttft {ttft} ms  unserved {r['unserved_requests']}",
+                  flush=True)
+        print(f"  paged: hwm {p['pages_hwm']}/{num_pages - 1} pages, "
+              f"{p['page_faults']} faults, {p['cow_copies']} COW, "
+              f"{p['preemptions']} preemptions  "
+              f"(paged/continuous {p['tokens_per_s']/c['tokens_per_s']:.2f}x)",
               flush=True)
     return rows
 
@@ -335,6 +391,7 @@ def main() -> None:
         cont = next(r for r in trace_rows
                     if r["variant"] == "trace_continuous")
         wave = next(r for r in trace_rows if r["variant"] == "trace_wave")
+        paged = next(r for r in trace_rows if r["variant"] == "trace_paged")
         record["results"].extend(trace_rows)
         record["trace"] = {
             "tokens_per_s_speedup": cont["tokens_per_s"]
@@ -344,6 +401,13 @@ def main() -> None:
             "occupancy": {"continuous": cont["slot_occupancy"],
                           "wave": wave["slot_occupancy"]},
             "outputs_identical_per_uid": True,   # asserted in run_trace
+            "paged_vs_contiguous_tokens_per_s": (
+                paged["tokens_per_s"] / cont["tokens_per_s"]),
+            "paged": {k: paged[k] for k in (
+                "requests_per_s", "ttft_p99_s", "unserved_requests",
+                "pages_hwm", "page_faults", "cow_copies", "preemptions",
+                "cache_capacity_tokens", "contiguous_capacity_tokens",
+                "trace_total_context_tokens")},
         }
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)

@@ -11,10 +11,17 @@ benchmarks/nm_decode_roofline.py).  ``--plan recipe.json`` prunes with a
 cell is n:m stay NmCompressed, everything else (unstructured cells, skip
 rules) stays dense (DESIGN.md §11; try
 examples/recipes/mixed_2to4_serve.json).
+
+``--paged`` serves from the paged KV cache (DESIGN.md §12): slot rows
+become shared page pools sized by ``--num-pages``, with prompt-prefix
+reuse across requests.  ``--http`` starts the SSE streaming front-end
+instead of the offline batch run and drives the same request mix over
+HTTP with Poisson arrivals (``--deadline`` attaches per-request budgets).
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -49,6 +56,19 @@ def main():
                     help="compressed matmul impl (default: backend auto)")
     ap.add_argument("--nm-block-b", type=int, default=0)
     ap.add_argument("--nm-block-c", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache with prefix reuse (serve/pager.py)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per cache page (must divide max_len)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page pool size (0 = auto: full capacity)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP/SSE and drive the request mix as "
+                         "a Poisson arrival trace against the live server")
+    ap.add_argument("--http-port", type=int, default=0,
+                    help="listen port (0 = ephemeral)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request deadline in seconds (0 = none)")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch, reduced=True)
@@ -84,21 +104,32 @@ def main():
         if dense:
             print(f"compressed weight bytes: {comp / dense:.3f} of dense")
 
+    max_len = args.prompt_len + args.max_new + 8
+    if args.paged and max_len % args.page_size:
+        max_len += args.page_size - max_len % args.page_size   # round up
     engine = ServingEngine(
         model, params,
         ServeConfig(batch_slots=args.slots,
-                    max_len=args.prompt_len + args.max_new + 8,
-                    scheduler=args.scheduler,
+                    max_len=max_len,
+                    scheduler="continuous" if args.http else args.scheduler,
                     nm_impl=args.nm_impl,
                     nm_block_b=args.nm_block_b,
-                    nm_block_c=args.nm_block_c),
+                    nm_block_c=args.nm_block_c,
+                    paged=args.paged,
+                    page_size=args.page_size,
+                    num_pages=args.num_pages),
     )
     rng = np.random.default_rng(0)
-    for uid in range(args.requests):
-        engine.submit(Request(
-            uid, rng.integers(0, cfg.vocab_size, size=args.prompt_len),
-            max_new=args.max_new,
-        ))
+    prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
+               for _ in range(args.requests)]
+
+    if args.http:
+        _serve_http(engine, args, prompts)
+        return
+
+    for uid, prompt in enumerate(prompts):
+        engine.submit(Request(uid, prompt, max_new=args.max_new,
+                              deadline_s=args.deadline))
     t0 = time.perf_counter()
     done = engine.run()
     dt = time.perf_counter() - t0
@@ -110,8 +141,45 @@ def main():
           f"({tokens / dt:.1f} tok/s incl. compile; "
           f"{args.scheduler}: {st['decode_steps']} decode steps, "
           f"slot occupancy {occ:.2f})")
+    if args.paged:
+        print(f"  paged: hwm {st['pages_hwm']} pages of "
+              f"{engine.pager.pool.num_pages - 1}, "
+              f"{st['page_faults']} faults, {st['cow_copies']} COW, "
+              f"{st['prefix_hit_tokens']} prefix-hit tokens, "
+              f"{st['preemptions']} preemptions")
     for r in done[:4]:
         print(f"  req {r.uid}: {r.out}")
+
+
+def _serve_http(engine, args, prompts):
+    """Start the SSE front-end and replay the mix with Poisson arrivals."""
+    from repro.serve.frontend import HttpFrontend, drive_http_trace
+
+    rng = np.random.default_rng(1)
+    gaps = rng.exponential(scale=0.05, size=len(prompts))
+    trace = [{"uid": i, "t": float(gaps[:i + 1].sum()), "prompt": p,
+              "max_new": args.max_new, "deadline_s": args.deadline}
+             for i, p in enumerate(prompts)]
+
+    async def main():
+        fe = HttpFrontend(engine, port=args.http_port)
+        await fe.start()
+        print(f"SSE front-end on http://127.0.0.1:{fe.port} — replaying "
+              f"{len(trace)} Poisson arrivals…")
+        t0 = time.perf_counter()
+        results = await drive_http_trace("127.0.0.1", fe.port, trace)
+        dt = time.perf_counter() - t0
+        await fe.stop()
+        tokens = sum(len(r["tokens"]) for r in results)
+        errors = [r["final"].get("error") for r in results
+                  if r["final"].get("error")]
+        print(f"{len(results)} streams, {tokens} tokens in {dt:.2f}s "
+              f"({tokens / dt:.1f} tok/s over HTTP incl. compile; "
+              f"{len(errors)} errored: {errors[:4]})")
+        for r in results[:4]:
+            print(f"  req {r['uid']}: {r['tokens']}")
+
+    asyncio.run(main())
 
 
 if __name__ == "__main__":

@@ -195,6 +195,9 @@ def gqa_decode(p, cfg, x, pos, cache, *, theta,
     """One-token decode.  x (B, 1, d); pos () or (B,) int32 absolute
     positions (see module docstring: scalar keeps the contiguous
     ``dynamic_update_slice`` writes, a vector scatters per row)."""
+    if isinstance(cache, (PagedGqaCache, PagedQuantGqaCache)):
+        return _gqa_decode_paged(p, cfg, x, pos, cache,
+                                 theta=theta, tape=tape, path=path)
     B = x.shape[0]
     per_slot = jnp.ndim(pos) > 0
     pos_vec = slot_positions(pos, B)                       # (B,)
@@ -356,6 +359,8 @@ def mla_decode(p, cfg, x, pos, cache: MlaCache, *, tape=None, path=()):
 
     ``pos`` is () or (B,) int32 (per-slot decode — see module docstring).
     """
+    if isinstance(cache, (PagedMlaCache, PagedQuantMlaCache)):
+        return _mla_decode_paged(p, cfg, x, pos, cache, tape=tape, path=path)
     B = x.shape[0]
     H = cfg.num_heads
     dn, dv, dkv = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
@@ -416,3 +421,275 @@ def mla_decode(p, cfg, x, pos, cache: MlaCache, *, tape=None, path=()):
     out = jnp.einsum("bhk,khd->bhd", ctx, w_v)              # (B,H,dv)
     y = L.dense(p["wo"], out.reshape(B, 1, H * dv), tape, path + ("wo",))
     return y, cache
+
+
+# ==========================================================================
+# Paged caches (serve/pager.py drives the page tables)
+# ==========================================================================
+# Pool leaves are (num_pages, page_size, ...) shared across every slot; the
+# per-slot ``table`` (B, pages_per_slot) int32 maps logical page p of slot b
+# to a physical page, and the decode gather ``pool[table].reshape(B, P·ps,
+# ...)`` reconstructs exactly the (B, L_pad, ...) row the contiguous layouts
+# hold, in the same logical order.  Masked lanes (pos_ids = -1 / beyond
+# ``length``) hit NEG_INF before the softmax and contribute an exact 0.0
+# probability, so lanes backed by unallocated (scratch) pages never perturb
+# the output — paged decode is bit-identical to contiguous decode whenever
+# P·ps equals the contiguous max_len.  Write side: one token lands at
+# physical page ``table[b, pos//ps]`` offset ``pos % ps``.  Page 0 is the
+# pager's scratch sink: retired slots keep re-decoding idempotently (static
+# engine signature) and their writes land there; scratch content stays
+# finite (zeros/last write) and is masked everywhere it could be read.
+
+
+class PagedGqaCache(NamedTuple):
+    k: Array          # (N_pages, page_size, Hkv, Dh) pool
+    v: Array
+    pos_ids: Array    # (B, P·page_size) absolute position per logical lane
+    table: Array      # (B, P) int32 physical page per logical page
+
+
+class PagedQuantGqaCache(NamedTuple):
+    k: Array          # (N_pages, page_size, Hkv, Dh) int8 pool
+    v: Array
+    k_scale: Array    # (N_pages, page_size, Hkv) fp32
+    v_scale: Array
+    pos_ids: Array    # (B, P·page_size)
+    table: Array      # (B, P)
+
+
+class PagedMlaCache(NamedTuple):
+    c_kv: Array       # (N_pages, page_size, kv_lora) pool
+    k_rope: Array     # (N_pages, page_size, Dr) pool
+    length: Array     # (B,) int32
+    table: Array      # (B, P)
+
+
+class PagedQuantMlaCache(NamedTuple):
+    c_kv: Array       # (N_pages, page_size, kv_lora) int8 pool
+    c_scale: Array    # (N_pages, page_size, kv_lora / G) fp32 pool
+    k_rope: Array     # (N_pages, page_size, Dr) pool
+    length: Array     # (B,) int32
+    table: Array      # (B, P)
+
+
+PAGED_CACHE_TYPES = (PagedGqaCache, PagedQuantGqaCache,
+                     PagedMlaCache, PagedQuantMlaCache)
+
+# pool leaves (page-indexed) per paged variant; remaining leaves are
+# per-slot bookkeeping handled explicitly by the helpers below.
+_POOL_FIELDS = {
+    PagedGqaCache: ("k", "v"),
+    PagedQuantGqaCache: ("k", "v", "k_scale", "v_scale"),
+    PagedMlaCache: ("c_kv", "k_rope"),
+    PagedQuantMlaCache: ("c_kv", "c_scale", "k_rope"),
+}
+
+
+def is_paged(cache) -> bool:
+    return isinstance(cache, PAGED_CACHE_TYPES)
+
+
+def paged_geometry(cache) -> tuple[int, int, int, int]:
+    """→ (num_pages, page_size, pages_per_slot, batch)."""
+    pool = getattr(cache, _POOL_FIELDS[type(cache)][0])
+    return (pool.shape[0], pool.shape[1],
+            cache.table.shape[1], cache.table.shape[0])
+
+
+def gqa_paged_cache_init(cfg, batch: int, *, num_pages: int, page_size: int,
+                         pages_per_slot: int, dtype=jnp.float32):
+    """Full-attention GQA pool (sliding-window layers stay contiguous —
+    a ring buffer is already O(W) per slot, paging buys nothing there)."""
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    pos_ids = jnp.full((batch, pages_per_slot * page_size), -1, jnp.int32)
+    table = jnp.zeros((batch, pages_per_slot), jnp.int32)     # all scratch
+    if getattr(cfg, "kv_cache_dtype", "") == "int8":
+        return PagedQuantGqaCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:3], jnp.float32),
+            v_scale=jnp.zeros(shape[:3], jnp.float32),
+            pos_ids=pos_ids, table=table)
+    return PagedGqaCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                         pos_ids=pos_ids, table=table)
+
+
+def mla_paged_cache_init(cfg, batch: int, *, num_pages: int, page_size: int,
+                         pages_per_slot: int, dtype=jnp.float32):
+    length = jnp.zeros((batch,), jnp.int32)
+    table = jnp.zeros((batch, pages_per_slot), jnp.int32)
+    if getattr(cfg, "kv_cache_dtype", "") == "int8":
+        g = _mla_group(cfg.kv_lora_rank)
+        return PagedQuantMlaCache(
+            c_kv=jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), jnp.int8),
+            c_scale=jnp.zeros((num_pages, page_size, cfg.kv_lora_rank // g),
+                              jnp.float32),
+            k_rope=jnp.zeros((num_pages, page_size, cfg.qk_rope_head_dim),
+                             dtype),
+            length=length, table=table)
+    return PagedMlaCache(
+        c_kv=jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((num_pages, page_size, cfg.qk_rope_head_dim), dtype),
+        length=length, table=table)
+
+
+def _paged_put(cache, field, new, phys, off):
+    """Write one token per row into the pool: (N, ps, ...) ← (B, 1, ...)."""
+    return getattr(cache, field).at[phys, off].set(new[:, 0])
+
+
+def _paged_gather(cache, field):
+    """pool[table] → the logical (B, P·ps, ...) row view."""
+    pool = getattr(cache, field)
+    B, P = cache.table.shape
+    return pool[cache.table].reshape(B, P * pool.shape[1], *pool.shape[2:])
+
+
+def _gqa_decode_paged(p, cfg, x, pos, cache, *, theta, tape, path):
+    B = x.shape[0]
+    pos_vec = slot_positions(pos, B)                       # (B,)
+    q, k, v = _qkv(p, cfg, x, pos_vec[:, None], theta, tape, path)
+    ps = cache.k.shape[1]
+    rows = jnp.arange(B)
+    phys = cache.table[rows, pos_vec // ps]                # (B,)
+    off = pos_vec % ps
+    ids_new = cache.pos_ids.at[rows, pos_vec].set(pos_vec)
+
+    if isinstance(cache, PagedQuantGqaCache):
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        cache = cache._replace(
+            k=_paged_put(cache, "k", kq, phys, off),
+            v=_paged_put(cache, "v", vq, phys, off),
+            k_scale=_paged_put(cache, "k_scale", ks, phys, off),
+            v_scale=_paged_put(cache, "v_scale", vs, phys, off),
+            pos_ids=ids_new)
+        k_att = (_paged_gather(cache, "k").astype(jnp.float32)
+                 * _paged_gather(cache, "k_scale")[..., None]).astype(x.dtype)
+        v_att = (_paged_gather(cache, "v").astype(jnp.float32)
+                 * _paged_gather(cache, "v_scale")[..., None]).astype(x.dtype)
+    else:
+        cache = cache._replace(k=_paged_put(cache, "k", k, phys, off),
+                               v=_paged_put(cache, "v", v, phys, off),
+                               pos_ids=ids_new)
+        k_att = _paged_gather(cache, "k")
+        v_att = _paged_gather(cache, "v")
+
+    valid = (ids_new >= 0) & (ids_new <= pos_vec[:, None])  # (B, P·ps)
+    out = _sdpa(q, k_att, v_att, valid[:, None, None, :],
+                cfg.num_heads, cfg.num_kv_heads)
+    y = L.dense(p["wo"], out.reshape(B, 1, -1), tape, path + ("wo",))
+    return y, cache
+
+
+def _mla_decode_paged(p, cfg, x, pos, cache, *, tape, path):
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dv, dkv = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    pos_vec = slot_positions(pos, B)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkr(
+        p, cfg, x, pos_vec[:, None], tape, path)
+    k_rope_upd = (k_rope_new[:, None, :] if k_rope_new.ndim == 2
+                  else k_rope_new)
+    ps = cache.c_kv.shape[1]
+    rows = jnp.arange(B)
+    phys = cache.table[rows, pos_vec // ps]
+    off = pos_vec % ps
+
+    if isinstance(cache, PagedQuantMlaCache):
+        ng = cache.c_scale.shape[-1]
+        g = dkv // ng
+        grouped = c_kv_new.astype(jnp.float32).reshape(B, 1, ng, g)
+        scale = jnp.maximum(jnp.max(jnp.abs(grouped), axis=-1),
+                            1e-8) / 127.0
+        cq = jnp.clip(jnp.round(grouped / scale[..., None]), -127,
+                      127).astype(jnp.int8).reshape(B, 1, dkv)
+        cache = cache._replace(
+            c_kv=_paged_put(cache, "c_kv", cq, phys, off),
+            c_scale=_paged_put(cache, "c_scale", scale, phys, off),
+            k_rope=_paged_put(cache, "k_rope", k_rope_upd, phys, off),
+            length=pos_vec + 1)
+        c_gat = _paged_gather(cache, "c_kv")                 # (B, L, dkv) int8
+        L_pad = c_gat.shape[1]
+        c_att = (c_gat.astype(jnp.float32).reshape(B, L_pad, ng, g)
+                 * _paged_gather(cache, "c_scale")[..., None]
+                 ).reshape(B, L_pad, dkv).astype(x.dtype)
+    else:
+        cache = cache._replace(
+            c_kv=_paged_put(cache, "c_kv", c_kv_new, phys, off),
+            k_rope=_paged_put(cache, "k_rope", k_rope_upd, phys, off),
+            length=pos_vec + 1)
+        c_att = _paged_gather(cache, "c_kv")
+    k_rope_att = _paged_gather(cache, "k_rope")              # (B, L, Dr)
+
+    wkv_b = p["wkv_b"]["w"].reshape(dkv, H, dn + dv)
+    w_k = wkv_b[..., :dn]
+    w_v = wkv_b[..., dn:]
+    q_eff = jnp.einsum("bhd,khd->bhk", q_nope[:, 0], w_k)
+    scores = jnp.einsum("bhk,blk->bhl", q_eff, c_att) + jnp.einsum(
+        "bhd,bld->bhl", q_rope[:, 0], k_rope_att
+    )
+    scale = 1.0 / jnp.sqrt(float(dn + cfg.qk_rope_head_dim))
+    valid = jnp.arange(c_att.shape[1])[None, :] <= pos_vec[:, None]
+    scores = jnp.where(valid[:, None, :], scores.astype(jnp.float32) * scale,
+                       NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhl,blk->bhk", probs, c_att)
+    out = jnp.einsum("bhk,khd->bhd", ctx, w_v)
+    y = L.dense(p["wo"], out.reshape(B, 1, H * dv), tape, path + ("wo",))
+    return y, cache
+
+
+# --------------------------------------------------------- engine helpers
+# All three run under jit with traced indices so one compilation covers
+# every slot / page assignment.  Padding convention: unused entries of the
+# fixed-length index vectors point at page 0 (scratch) — those scatters
+# write garbage into the scratch sink and the gathers read garbage that the
+# callers mask, so the signature stays static.
+
+def paged_copy_pages(cache, src, dst):
+    """Pool-page copy ``pool[dst[i]] = pool[src[i]]`` on every pool leaf —
+    the COW service.  src/dst (K,) int32; pad with (scratch, scratch)."""
+    upd = {f: getattr(cache, f).at[dst].set(getattr(cache, f)[src])
+           for f in _POOL_FIELDS[type(cache)]}
+    return cache._replace(**upd)
+
+
+def paged_write_row(cache, row, slot, lps, pids):
+    """Scatter a B=1 contiguous row cache into pool pages (admission).
+
+    ``row`` is the matching contiguous variant with L = P·ps; logical page
+    ``lps[i]`` of the row lands in physical page ``pids[i]`` (pad with
+    (0, scratch)).  The slot's bookkeeping row (pos_ids / length) is copied
+    wholesale from the row cache.  The caller updates ``table`` itself.
+    """
+    ps = getattr(cache, _POOL_FIELDS[type(cache)][0]).shape[1]
+    upd = {}
+    for f in _POOL_FIELDS[type(cache)]:
+        rleaf = getattr(row, f)                              # (1, L, ...)
+        pages = rleaf[0].reshape(-1, ps, *rleaf.shape[2:])[lps]
+        upd[f] = getattr(cache, f).at[pids].set(pages)
+    if isinstance(cache, (PagedGqaCache, PagedQuantGqaCache)):
+        upd["pos_ids"] = cache.pos_ids.at[slot].set(row.pos_ids[0])
+    else:
+        upd["length"] = cache.length.at[slot].set(row.length[0])
+    return cache._replace(**upd)
+
+
+def paged_prefix_to_row(cache, row, pids, n_tok):
+    """Materialize a shared prefix into a B=1 contiguous row cache.
+
+    ``pids`` (P,) int32 covers the whole row (pad with scratch); positions
+    >= ``n_tok`` (traced) are garbage the tail prefill overwrites / masks.
+    """
+    ps = getattr(cache, _POOL_FIELDS[type(cache)][0]).shape[1]
+    upd = {}
+    for f in _POOL_FIELDS[type(cache)]:
+        pool = getattr(cache, f)
+        upd[f] = pool[pids].reshape(1, -1, *pool.shape[2:])
+    L_pad = pids.shape[0] * ps
+    if isinstance(cache, (PagedGqaCache, PagedQuantGqaCache)):
+        lanes = jnp.arange(L_pad, dtype=jnp.int32)
+        upd["pos_ids"] = jnp.where(lanes < n_tok, lanes, -1)[None]
+    else:
+        upd["length"] = jnp.full((1,), n_tok, jnp.int32)
+    return row._replace(**upd)

@@ -192,6 +192,33 @@ class TransformerLM:
                 )
         return caches
 
+    def init_paged_cache(self, batch: int, *, num_pages: int, page_size: int,
+                         pages_per_slot: int):
+        """Paged resident cache: full-attention layers share page pools
+        (serve/pager.py owns allocation); sliding-window layers keep their
+        contiguous ring buffers — a ring is already O(window) per slot, so
+        paging it buys nothing and would complicate the wrap-around write.
+        decode_step needs no paged awareness: gqa_decode / mla_decode
+        dispatch on the cache type per layer."""
+        cfg = self.cfg
+        dt = cfg.jdtype
+        max_len = pages_per_slot * page_size
+        caches = {}
+        for i in range(cfg.num_layers):
+            if cfg.uses_mla:
+                caches[i] = A.mla_paged_cache_init(
+                    cfg, batch, num_pages=num_pages, page_size=page_size,
+                    pages_per_slot=pages_per_slot, dtype=dt)
+            elif self._window(i):
+                slots = min(self._window(i), max_len)
+                caches[i] = A.gqa_cache_init(cfg, batch, max_len,
+                                             window=slots, dtype=dt)
+            else:
+                caches[i] = A.gqa_paged_cache_init(
+                    cfg, batch, num_pages=num_pages, page_size=page_size,
+                    pages_per_slot=pages_per_slot, dtype=dt)
+        return caches
+
     def decode_step(self, params, cache, tokens, pos, embeds=None):
         """tokens (B, 1) int32; pos () or (B,) int32 absolute positions —
         a vector decodes every batch slot at its own depth (continuous

@@ -1,8 +1,11 @@
-"""Serving: batched prefill/decode engine + n:m compressed decode weights."""
+"""Serving: batched prefill/decode engine, paged KV allocator + n:m
+compressed decode weights."""
 from repro.serve.engine import Request, ServeConfig, ServingEngine
 from repro.serve.compressed import compress_params, decompress_params
+from repro.serve.pager import Pager, PagePool, PoolExhausted, PrefixCache
 
 __all__ = [
     "Request", "ServeConfig", "ServingEngine",
     "compress_params", "decompress_params",
+    "Pager", "PagePool", "PoolExhausted", "PrefixCache",
 ]

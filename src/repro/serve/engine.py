@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import Any
 
@@ -56,7 +57,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ops import NmKernelConfig
+from repro.models import attention as A
 from repro.models import layers as L
+from repro.serve.pager import Pager, PoolExhausted, SCRATCH
 
 Array = jax.Array
 
@@ -72,6 +75,13 @@ class Request:
     t_submit: float = -1.0
     t_first: float = -1.0
     t_done: float = -1.0
+    # wall-clock budget measured from t_submit (0 = none); expired requests
+    # finish with error="deadline" and whatever tokens they produced
+    deadline_s: float = 0.0
+    error: str = ""          # "" = clean; "deadline" / "cancelled" otherwise
+    # streaming hook: called as on_token(req, token) after each absorbed
+    # token (front-end SSE push).  Not serialized by snapshot().
+    on_token: Any = dataclasses.field(default=None, repr=False, compare=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +99,39 @@ class ServeConfig:
     nm_block_b: int = 0
     nm_block_c: int = 0
     nm_block_x: int = 0
+    # paged KV cache (serve/pager.py): cache rows become page pools shared
+    # across slots; memory scales with resident tokens, not slots × max_len.
+    paged: bool = False
+    page_size: int = 16      # tokens per page; must divide max_len
+    num_pages: int = 0       # 0 = auto: 1 + batch_slots · max_len/page_size
+    prefix_reuse: bool = True  # share prompt pages across requests (COW)
+
+    def __post_init__(self):
+        if not (math.isfinite(self.temperature) and self.temperature > 0):
+            raise ValueError(
+                f"temperature must be a finite positive float, got "
+                f"{self.temperature!r} — <= 0 turns categorical sampling "
+                f"into NaN/garbage silently")
+        if self.batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {self.batch_slots}")
+        if self.max_len < 2:
+            raise ValueError(f"max_len must be >= 2, got {self.max_len}")
+        if self.paged:
+            if self.scheduler != "continuous":
+                raise ValueError("paged=True requires the continuous "
+                                 "scheduler (wave allocates per-wave caches)")
+            if self.page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+            if self.max_len % self.page_size:
+                raise ValueError(
+                    f"page_size={self.page_size} must divide "
+                    f"max_len={self.max_len} so the paged logical row and "
+                    f"the contiguous row have identical length (bit-parity)")
+            pps = self.max_len // self.page_size
+            if self.num_pages and self.num_pages < 1 + pps:
+                raise ValueError(
+                    f"num_pages={self.num_pages} < {1 + pps} (scratch + one "
+                    f"full slot) cannot guarantee forward progress")
 
 
 # --------------------------------------------------------------------------
@@ -108,8 +151,12 @@ def _decode_fn(model, params, cache, tokens, pos):
     return logits[:, -1, :], cache
 
 
-def _prefill_fn(model, params, cache, tokens):
-    """Cached prefill: sequential decode over the prompt, batched."""
+def _prefill_fn(model, params, cache, tokens, start):
+    """Cached prefill: sequential decode over the prompt, batched.
+
+    ``start`` (traced) skips tokens already materialized in the cache by a
+    shared-prefix gather — positions [start, S) are computed, [0, start)
+    are assumed present.  Callers without a prefix pass 0."""
 
     def body(i, carry):
         cache, _ = carry
@@ -119,7 +166,8 @@ def _prefill_fn(model, params, cache, tokens):
 
     B = tokens.shape[0]
     init_logits = jnp.zeros((B, model.cfg.vocab_size), jnp.float32)
-    return jax.lax.fori_loop(0, tokens.shape[1], body, (cache, init_logits))
+    return jax.lax.fori_loop(start, tokens.shape[1], body,
+                             (cache, init_logits))
 
 
 def _write_slot_fn(cache, row_cache, slot):
@@ -138,6 +186,45 @@ def _write_slot_fn(cache, row_cache, slot):
     return jax.tree.map(put, cache, row_cache)
 
 
+# ---- paged-cache device helpers (per-layer dispatch: paged layers use the
+# pool scatter/gather primitives from models/attention.py, contiguous ring
+# layers keep the whole-row dynamic_update_slice).  All indices are traced,
+# so one compilation covers every slot / page assignment; unused entries of
+# the fixed-length page vectors point at page 0 (the pager's scratch sink).
+
+def _admit_write_fn(cache, row, slot, lps, pids):
+    """Admission: scatter a B=1 row cache into the resident paged cache.
+
+    Row logical page ``lps[i]`` lands in pool page ``pids[i]``; shared
+    (kept) pages are absent from the vectors and stay untouched."""
+    out = {}
+    for i, layer in cache.items():
+        if A.is_paged(layer):
+            out[i] = A.paged_write_row(layer, row[i], slot, lps, pids)
+        else:
+            def put(full, one):
+                return jax.lax.dynamic_update_slice(
+                    full, one.astype(full.dtype),
+                    (slot,) + (0,) * (one.ndim - 1))
+            out[i] = jax.tree.map(put, layer, row[i])
+    return out
+
+
+def _prefix_row_fn(cache, row, pids, n_tok):
+    """Materialize a shared prefix (pool pages ``pids``, first ``n_tok``
+    tokens valid) into a fresh B=1 row cache ahead of the tail prefill."""
+    return {i: (A.paged_prefix_to_row(layer, row[i], pids, n_tok)
+                if A.is_paged(layer) else row[i])
+            for i, layer in cache.items()}
+
+
+def _copy_pages_fn(cache, src, dst):
+    """Copy-on-write service: pool[dst[i]] = pool[src[i]] on paged layers."""
+    return {i: (A.paged_copy_pages(layer, src, dst)
+                if A.is_paged(layer) else layer)
+            for i, layer in cache.items()}
+
+
 def _model_jits(model, nm_kernel) -> dict:
     key = (id(model), nm_kernel)
     entry = _JIT_CACHE.get(key)
@@ -151,6 +238,13 @@ def _model_jits(model, nm_kernel) -> dict:
                               donate_argnums=(1,)),
             "prefill": jax.jit(functools.partial(_prefill_fn, model)),
             "write_slot": jax.jit(_write_slot_fn, donate_argnums=(0,)),
+            # paged helpers: admission scatter donates the resident cache
+            # (rebound immediately); the prefix gather reads cache and row
+            # without donation — its outputs are fresh gather results, so
+            # no input buffer is reusable anyway.
+            "admit_write": jax.jit(_admit_write_fn, donate_argnums=(0,)),
+            "prefix_row": jax.jit(_prefix_row_fn),
+            "copy_pages": jax.jit(_copy_pages_fn, donate_argnums=(0,)),
         }
         while len(_JIT_CACHE) >= _JIT_CACHE_MAX:       # bound process RSS
             _JIT_CACHE.pop(next(iter(_JIT_CACHE)))
@@ -174,18 +268,43 @@ class ServingEngine:
         # virtual time in uniform work units (1/decode step, S/prefill) —
         # machine-independent clock for trace-driven benchmarks
         self.stats = {"decode_steps": 0, "busy_slot_steps": 0,
-                      "prefills": 0, "prefill_tokens": 0, "vtime": 0}
+                      "prefills": 0, "prefill_tokens": 0, "vtime": 0,
+                      "preemptions": 0, "page_faults": 0, "cow_copies": 0,
+                      "prefix_hit_tokens": 0, "pages_hwm": 0}
         jits = _model_jits(model, self.nm_kernel)
         self._decode = jits["decode"]
         # one shared jitted prefill; prompt-length bucketing is its
         # internal shape-keyed compile cache (one executable per (B, S))
         self._prefill = jits["prefill"]
         self._write_slot = jits["write_slot"]
+        self._admit_write = jits["admit_write"]
+        self._prefix_row = jits["prefix_row"]
+        self._copy_pages = jits["copy_pages"]
         # continuous-scheduler per-slot state (allocated on first admission)
         self._slots: list[Request | None] = [None] * cfg.batch_slots
         self._cache = None
         self._tokens = np.zeros((cfg.batch_slots, 1), np.int32)
         self._pos = np.zeros((cfg.batch_slots,), np.int32)
+        # admission recency per slot — preemption victims are LIFO
+        self._seq = 0
+        self._slot_seq = [0] * cfg.batch_slots
+        self.pager: Pager | None = None
+        if cfg.paged:
+            if not hasattr(model, "init_paged_cache"):
+                raise ValueError(
+                    f"model {type(model).__name__} has no init_paged_cache — "
+                    f"paged serving covers the transformer families")
+            self._pps = cfg.max_len // cfg.page_size
+            self._num_pages = cfg.num_pages or 1 + cfg.batch_slots * self._pps
+            # prefix reuse is unsound across sliding-window ring buffers
+            # (a sharer would be missing the ring history of the skipped
+            # positions), so it auto-disables for windowed models
+            prefix = (cfg.prefix_reuse
+                      and not getattr(model.cfg, "sliding_window", 0))
+            self.pager = Pager(
+                batch_slots=cfg.batch_slots, pages_per_slot=self._pps,
+                num_pages=self._num_pages, page_size=cfg.page_size,
+                prefix_reuse=prefix)
 
     @staticmethod
     def _resolve_nm_kernel(model, cfg: ServeConfig) -> NmKernelConfig | None:
@@ -220,6 +339,8 @@ class ServingEngine:
         if token == self.cfg.eos_id or len(req.out) >= req.max_new:
             req.done = True
             req.t_done = time.perf_counter()
+        if req.on_token is not None:
+            req.on_token(req, token)
 
     # ----------------------------------------------------------- main loop
     def submit(self, req: Request):
@@ -235,9 +356,40 @@ class ServingEngine:
         """No queued requests and no slot mid-generation."""
         return not self.queue and all(s is None for s in self._slots)
 
+    def cancel(self, uid: int, *, error: str = "cancelled") -> bool:
+        """Abort a queued or in-flight request; it joins ``finished`` with
+        ``done=True``, its partial tokens, and ``error`` set.  Returns False
+        when the uid is not resident (already finished or unknown)."""
+        for i, req in enumerate(self.queue):
+            if req.uid == uid:
+                req.done, req.error = True, error
+                if req.t_done < 0:
+                    req.t_done = time.perf_counter()
+                self.queue.pop(i)
+                self.finished.append(req)
+                return True
+        for slot, req in enumerate(self._slots):
+            if req is not None and req.uid == uid:
+                req.done, req.error = True, error
+                self._retire(slot)
+                return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        now = time.perf_counter()
+        expired = [req.uid
+                   for req in (*self.queue,
+                               *(r for r in self._slots if r is not None))
+                   if not req.done and req.deadline_s > 0
+                   and req.t_submit >= 0
+                   and now - req.t_submit > req.deadline_s]
+        for uid in expired:
+            self.cancel(uid, error="deadline")
+
     def pump(self) -> bool:
         """Process one scheduling quantum — one decode step (continuous) or
         one whole wave (wave).  Returns False when there is nothing to do."""
+        self._expire_deadlines()
         with L.nm_kernel_scope(self.nm_kernel):
             if self.cfg.scheduler == "wave":
                 wave = self._next_wave()
@@ -254,18 +406,33 @@ class ServingEngine:
             return self._continuous_step()
 
     def run(self, *, max_steps: int = 100_000) -> list[Request]:
-        """Drain queue and slots; returns finished requests in uid order."""
+        """Drain queue and slots; returns finished requests in uid order.
+
+        If ``max_steps`` runs out first, in-flight and queued requests are
+        *also* returned, flagged ``done=False`` with their partial ``out`` —
+        they previously vanished from the caller's view entirely.  Partials
+        stay resident in the engine: further ``pump()``/``run()`` calls
+        continue them (they will be returned again once finished).
+        """
         steps = 0
         while steps < max_steps and self.pump():
             steps += 1
         done, self.finished = self.finished, []
+        if not self.idle():
+            done += [r for r in self._slots if r is not None]
+            done += list(self.queue)
         return sorted(done, key=lambda r: r.uid)
 
     # ------------------------------------------------- continuous scheduler
     def _ensure_state(self):
         if self._cache is None:
-            self._cache = self.model.init_cache(
-                self.cfg.batch_slots, self.cfg.max_len)
+            if self.cfg.paged:
+                self._cache = self.model.init_paged_cache(
+                    self.cfg.batch_slots, num_pages=self._num_pages,
+                    page_size=self.cfg.page_size, pages_per_slot=self._pps)
+            else:
+                self._cache = self.model.init_cache(
+                    self.cfg.batch_slots, self.cfg.max_len)
 
     def _retire(self, slot: int) -> None:
         req = self._slots[slot]
@@ -273,8 +440,78 @@ class ServingEngine:
             req.t_done = time.perf_counter()
         self.finished.append(req)
         self._slots[slot] = None
+        if self.pager is not None:
+            self.pager.retire(slot)
         # _pos[slot] keeps its last (< max_len) value: the freed slot keeps
-        # re-decoding idempotently until the next admission overwrites it.
+        # re-decoding idempotently until the next admission overwrites it
+        # (paged: the retired row points at the scratch page, a write sink).
+
+    def _admit_into(self, slot: int) -> bool:
+        """Prefill the queue head into ``slot``.  Returns False — leaving
+        the request queued — when the paged pool cannot cover its pages.
+
+        A request with partial ``out`` is a preemption resume: the engine
+        re-prefills prompt + out (positions [0, S_all)), skips sampling, and
+        re-enters decode at pos = S_all - 1 feeding the last emitted token —
+        the next decode step rewrites that position with identical k/v, so
+        the continuation is bit-identical to never having been preempted
+        (under greedy; sampled runs re-split the RNG per emitted token).
+        """
+        req = self.queue[0]
+        self._ensure_state()
+        prompt = np.asarray(req.prompt, np.int32)
+        resumed = len(req.out) > 0
+        tokens_all = (np.concatenate([prompt, np.asarray(req.out, np.int32)])
+                      if resumed else prompt)
+        S = len(tokens_all)
+        plan = None
+        if self.pager is not None:
+            try:
+                plan = self.pager.admit(slot, tokens_all)
+            except PoolExhausted:
+                return False
+        self.queue.pop(0)
+        row = self.model.init_cache(1, self.cfg.max_len)
+        start = 0
+        if plan is not None:
+            start = plan.start
+            if plan.n_shared_tok:
+                pids = np.full(self._pps, SCRATCH, np.int32)
+                pids[:len(plan.gather_pids)] = plan.gather_pids
+                row = self._prefix_row(self._cache, row, jnp.asarray(pids),
+                                       jnp.int32(plan.n_shared_tok))
+                self.stats["prefix_hit_tokens"] += plan.n_shared_tok
+        row, last = self._prefill(self.params, row,
+                                  jnp.asarray(tokens_all)[None, :], start)
+        if plan is not None:
+            lps = np.zeros(self._pps, np.int32)
+            pids = np.full(self._pps, SCRATCH, np.int32)
+            lps[:len(plan.fresh_lps)] = plan.fresh_lps
+            pids[:len(plan.fresh_pids)] = plan.fresh_pids
+            self._cache = self._admit_write(self._cache, row, jnp.int32(slot),
+                                            jnp.asarray(lps),
+                                            jnp.asarray(pids))
+            self.pager.register(slot, prompt)
+        else:
+            self._cache = self._write_slot(self._cache, row, slot)
+        self.stats["prefills"] += 1
+        self.stats["prefill_tokens"] += S - start
+        self.stats["vtime"] += S - start
+        self._slots[slot] = req
+        self._slot_seq[slot] = self._seq
+        self._seq += 1
+        if resumed:
+            self._tokens[slot, 0] = int(tokens_all[-1])
+            self._pos[slot] = S - 1     # re-decode the last emitted token
+            return True
+        tok = int(np.asarray(self._select(last))[0])
+        self._absorb(req, tok)
+        self._tokens[slot, 0] = tok
+        self._pos[slot] = S
+        if req.done or S + 1 >= self.cfg.max_len:
+            req.done = True
+            self._retire(slot)          # freed — caller retries the queue
+        return True
 
     def _admit(self) -> bool:
         """Fill free slots from the queue (prefill-into-slot).  The whole
@@ -284,34 +521,93 @@ class ServingEngine:
         admitted = False
         for slot in range(self.cfg.batch_slots):
             while self._slots[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                S = len(req.prompt)     # S + 1 <= max_len checked at submit
-                self._ensure_state()
-                prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                row = self.model.init_cache(1, self.cfg.max_len)
-                row, last = self._prefill(self.params, row, prompt)
-                self._cache = self._write_slot(self._cache, row, slot)
-                tok = int(np.asarray(self._select(last))[0])
-                self._absorb(req, tok)
-                self._tokens[slot, 0] = tok
-                self._pos[slot] = S
-                self.stats["prefills"] += 1
-                self.stats["prefill_tokens"] += S
-                self.stats["vtime"] += S
+                if not self._admit_into(slot):
+                    return admitted     # pool exhausted — wait for retires
                 admitted = True
-                self._slots[slot] = req
-                if req.done or S + 1 >= self.cfg.max_len:
-                    req.done = True
-                    self._retire(slot)      # freed — try the queue again
-                else:
+                if self._slots[slot] is not None:
                     break
         return admitted
+
+    # ------------------------------------------------------- paged plumbing
+    def _preempt(self, slot: int) -> None:
+        """Evict an active slot to free its pages: the request re-queues at
+        the front with its partial output and resumes via ``_admit_into``."""
+        req = self._slots[slot]
+        self.pager.retire(slot)
+        self._slots[slot] = None
+        self.queue.insert(0, req)
+        self.stats["preemptions"] += 1
+
+    def _victim(self, exclude: int) -> int | None:
+        """Most recently admitted active slot other than ``exclude`` (LIFO —
+        the oldest requests keep their accumulated pages and finish first)."""
+        cands = [s for s in range(self.cfg.batch_slots)
+                 if s != exclude and self._slots[s] is not None]
+        return max(cands, key=lambda s: self._slot_seq[s], default=None)
+
+    def _fault_active(self) -> None:
+        """Make every active slot's write page privately owned before the
+        decode step: allocate on page boundaries, COW on shared pages,
+        preempting LIFO victims under pool pressure."""
+        ps = self.cfg.page_size
+        copies: list[tuple[int, int, int, int]] = []   # (slot, lp, src, dst)
+        for slot in range(self.cfg.batch_slots):
+            if self._slots[slot] is None:
+                continue
+            pos = int(self._pos[slot])
+            was_scratch = self.pager.table[slot, pos // ps] == SCRATCH
+            while True:
+                try:
+                    copies.extend((slot, pos // ps, s, d)
+                                  for s, d in self.pager.fault_in(slot, pos))
+                    break
+                except PoolExhausted:
+                    victim = self._victim(exclude=slot)
+                    if victim is None:
+                        raise          # impossible: num_pages >= 1 + pps
+                    self._preempt(victim)
+            if was_scratch:
+                self.stats["page_faults"] += 1
+        # a preemption later in the loop may have freed (and re-allocated)
+        # an earlier slot's COW destination — keep only copies whose slot is
+        # still active and whose destination page is still mapped there
+        copies = [(slot, lp, s, d) for slot, lp, s, d in copies
+                  if self._slots[slot] is not None
+                  and self.pager.table[slot, lp] == d]
+        if copies:
+            # at most one COW per slot per step → pad to a fixed (B,) shape
+            src = np.zeros(self.cfg.batch_slots, np.int32)
+            dst = np.zeros(self.cfg.batch_slots, np.int32)
+            for j, (_, _, s, d) in enumerate(copies):
+                src[j], dst[j] = s, d
+            self._cache = self._copy_pages(self._cache, jnp.asarray(src),
+                                           jnp.asarray(dst))
+            self.stats["cow_copies"] += len(copies)
+
+    def _sync_tables(self) -> None:
+        """Mirror the host-authoritative page table to the device cache."""
+        if not self.pager.dirty:
+            return
+        self._cache = {
+            i: (layer._replace(table=jnp.asarray(self.pager.table))
+                if A.is_paged(layer) else layer)
+            for i, layer in self._cache.items()}
+        self.pager.dirty = False
 
     def _continuous_step(self) -> bool:
         admitted = self._admit()
         active = [s for s in self._slots if s is not None]
         if not active:
             return admitted
+        if self.pager is not None:
+            self._fault_active()
+            self._sync_tables()
+            active = [s for s in self._slots if s is not None]  # preemptions
+            if not active:
+                return admitted
+            used = self.pager.pool.used_pages
+            if used > self.stats["pages_hwm"]:
+                self.stats["pages_hwm"] = used
         logits, self._cache = self._decode(
             self.params, self._cache,
             jnp.asarray(self._tokens), jnp.asarray(self._pos))
@@ -359,7 +655,7 @@ class ServingEngine:
                 jnp.asarray(req.prompt, jnp.int32))
 
         cache = self.model.init_cache(B, self.cfg.max_len)
-        cache, last = self._prefill(self.params, cache, prompts)
+        cache, last = self._prefill(self.params, cache, prompts, 0)
         self.stats["prefills"] += 1
         self.stats["prefill_tokens"] += S * len(wave)   # tokens prefilled
         self.stats["vtime"] += S        # work units: batched ≈ one B=1 pass
@@ -401,7 +697,11 @@ class ServingEngine:
                 "done": bool(req.done),
                 "t_submit": float(req.t_submit),
                 "t_first": float(req.t_first),
-                "t_done": float(req.t_done)}
+                "t_done": float(req.t_done),
+                "deadline_s": float(req.deadline_s),
+                "error": str(req.error)}
+        # on_token is deliberately dropped: callbacks don't serialize; a
+        # restored server re-attaches streams when clients reconnect.
 
     @staticmethod
     def _req_from_state(st: dict | None) -> Request | None:
@@ -414,7 +714,9 @@ class ServingEngine:
                        done=bool(st["done"]),
                        t_submit=float(st.get("t_submit", -1.0)),
                        t_first=float(st.get("t_first", -1.0)),
-                       t_done=float(st.get("t_done", -1.0)))
+                       t_done=float(st.get("t_done", -1.0)),
+                       deadline_s=float(st.get("deadline_s", 0.0)),
+                       error=str(st.get("error", "")))
 
     def snapshot(self) -> dict:
         """Full engine state for preempt/resume.
@@ -431,6 +733,9 @@ class ServingEngine:
             "scheduler": self.cfg.scheduler,
             "batch_slots": self.cfg.batch_slots,
             "max_len": self.cfg.max_len,
+            "paged": self.cfg.paged,
+            "page_size": self.cfg.page_size if self.cfg.paged else 0,
+            "pager": None if self.pager is None else self.pager.snapshot(),
             "device": {
                 "cache": (None if self._cache is None
                           else jax.tree.map(np.asarray, self._cache)),
@@ -465,6 +770,16 @@ class ServingEngine:
                     f"snapshot {field}={snap[field]} does not match engine "
                     f"{field}={getattr(self.cfg, field)} — the resident "
                     f"cache geometry must be identical")
+        if bool(snap.get("paged", False)) != self.cfg.paged:
+            raise ValueError(
+                f"snapshot paged={snap.get('paged', False)} does not match "
+                f"engine paged={self.cfg.paged} — cache layouts differ")
+        if self.cfg.paged and snap.get("page_size") != self.cfg.page_size:
+            raise ValueError(
+                f"snapshot page_size={snap.get('page_size')} does not match "
+                f"engine page_size={self.cfg.page_size}")
+        if self.pager is not None:
+            self.pager.restore(snap["pager"])
         dev = snap["device"]
         cache = dev["cache"]
         self._cache = (None if cache is None

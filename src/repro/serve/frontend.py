@@ -1,0 +1,270 @@
+"""Async HTTP front-end for the serving engine — stdlib asyncio only.
+
+Endpoints:
+  POST /generate  {"prompt": [ints], "max_new": n, "deadline_s": s}
+                  → ``text/event-stream``: one ``data: {"token": t}`` event
+                  per decoded token, then ``data: {"done": true, ...}``.
+  GET  /healthz   → {"ok": true, "queued": q, "active": a}
+  GET  /stats     → engine.stats as JSON
+
+Threading model: the engine is single-threaded compute, so every engine
+touch (submit / cancel / pump) happens under one lock.  ``pump()`` runs in
+the default executor (it blocks on device steps); the asyncio loop stays
+free to accept connections and stream tokens.  Tokens flow engine → client
+through a bounded per-request ``asyncio.Queue`` fed by the ``Request.
+on_token`` hook via ``call_soon_threadsafe``:
+
+  * backpressure — a client that stops reading fills its queue; the next
+    token overflows and the front-end cancels the request in the engine
+    (error="backpressure") instead of buffering unboundedly.  TCP-level
+    pushback is handled separately by awaiting ``writer.drain()``.
+  * deadlines — ``deadline_s`` rides on the Request; the engine's pump
+    expires it (error="deadline") whether the request is queued or
+    mid-decode, and the stream ends with the partial output.
+
+The module doubles as the client: ``sse_generate`` speaks the protocol and
+``drive_http_trace`` replays a Poisson arrival trace against a live server
+(launch/serve.py --http and the slow e2e test use it).
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+from typing import Any
+
+import numpy as np
+
+from repro.serve.engine import Request, ServingEngine
+
+
+class HttpFrontend:
+    def __init__(self, engine: ServingEngine, *, host: str = "127.0.0.1",
+                 port: int = 0, queue_tokens: int = 256,
+                 poll_s: float = 0.002, drain_delay_s: float = 0.0):
+        if engine.cfg.scheduler != "continuous":
+            raise ValueError("HTTP streaming needs the continuous scheduler "
+                             "(wave batches whole requests)")
+        self.engine = engine
+        self.host, self.port = host, port
+        self.queue_tokens = queue_tokens
+        self.poll_s = poll_s
+        # test hook: sleep after each streamed event, emulating a saturated
+        # egress link (kernel socket buffers hide TCP pushback at the tiny
+        # payload sizes the test models use)
+        self.drain_delay_s = drain_delay_s
+        self._lock = threading.Lock()     # serializes every engine touch
+        self._uid = 0
+        self._overflow: set[int] = set()  # uids whose client fell behind
+        self._server: asyncio.AbstractServer | None = None
+        self._pump_task: asyncio.Task | None = None
+        self._stopping = False
+
+    # ------------------------------------------------------------ lifecycle
+    async def start(self) -> None:
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._pump_task = asyncio.ensure_future(self._pump_loop())
+
+    async def stop(self) -> None:
+        self._stopping = True
+        if self._pump_task is not None:
+            await self._pump_task
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    def _pump_once(self) -> bool:
+        with self._lock:
+            return self.engine.pump()
+
+    async def _pump_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        while not self._stopping:
+            busy = await loop.run_in_executor(None, self._pump_once)
+            if not busy:
+                await asyncio.sleep(self.poll_s)
+
+    # ------------------------------------------------------------- handlers
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            request = await reader.readline()
+            parts = request.decode("ascii", "replace").split()
+            if len(parts) < 2:
+                return
+            method, path = parts[0], parts[1]
+            clen = 0
+            while True:
+                line = await reader.readline()
+                if line in (b"\r\n", b"\n", b""):
+                    break
+                key, _, val = line.decode("ascii", "replace").partition(":")
+                if key.strip().lower() == "content-length":
+                    clen = int(val)
+            body = (json.loads(await reader.readexactly(clen))
+                    if clen else {})
+            if method == "POST" and path == "/generate":
+                await self._generate(body, writer)
+            elif method == "GET" and path == "/healthz":
+                with self._lock:
+                    active = sum(r is not None for r in self.engine._slots)
+                    queued = len(self.engine.queue)
+                self._json(writer, {"ok": True, "queued": queued,
+                                    "active": active})
+            elif method == "GET" and path == "/stats":
+                with self._lock:
+                    stats = dict(self.engine.stats)
+                self._json(writer, stats)
+            else:
+                self._json(writer, {"error": "not found"}, status=404)
+            await writer.drain()
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            writer.close()
+
+    @staticmethod
+    def _json(writer, obj: dict, status: int = 200) -> None:
+        payload = json.dumps(obj).encode()
+        writer.write(
+            f"HTTP/1.1 {status} {'OK' if status == 200 else 'ERR'}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(payload)}\r\n"
+            f"Connection: close\r\n\r\n".encode() + payload)
+
+    async def _generate(self, body: dict,
+                        writer: asyncio.StreamWriter) -> None:
+        loop = asyncio.get_running_loop()
+        queue: asyncio.Queue = asyncio.Queue(maxsize=self.queue_tokens)
+        with self._lock:
+            uid = self._uid
+            self._uid += 1
+
+        def on_token(req: Request, tok: int) -> None:
+            # executor thread (inside pump, engine lock held) → loop thread
+            def push():
+                try:
+                    queue.put_nowait(tok)
+                except asyncio.QueueFull:
+                    self._overflow.add(req.uid)
+            loop.call_soon_threadsafe(push)
+
+        req = Request(uid, np.asarray(body["prompt"], np.int32),
+                      max_new=int(body.get("max_new", 16)),
+                      deadline_s=float(body.get("deadline_s", 0.0)),
+                      on_token=on_token)
+        with self._lock:
+            self.engine.submit(req)
+
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: text/event-stream\r\n"
+                     b"Cache-Control: no-store\r\n"
+                     b"Connection: close\r\n\r\n")
+        await writer.drain()
+        sent = 0
+        try:
+            while True:
+                if uid in self._overflow:
+                    self._overflow.discard(uid)
+                    with self._lock:
+                        self.engine.cancel(uid, error="backpressure")
+                    if not req.error:      # finished before the cancel
+                        req.error = "backpressure"   # tokens were dropped
+                    break
+                try:
+                    tok = await asyncio.wait_for(queue.get(), timeout=0.05)
+                except asyncio.TimeoutError:
+                    if req.done and queue.empty():
+                        break
+                    continue
+                writer.write(f"data: {json.dumps({'token': int(tok)})}\n\n"
+                             .encode())
+                await writer.drain()        # TCP backpressure
+                if self.drain_delay_s:
+                    await asyncio.sleep(self.drain_delay_s)
+                sent += 1
+            final = {"done": True, "n": len(req.out), "sent": sent,
+                     "error": req.error}
+            writer.write(f"data: {json.dumps(final)}\n\n".encode())
+        except (ConnectionError, asyncio.CancelledError):
+            with self._lock:
+                self.engine.cancel(uid, error="cancelled")
+            raise
+
+
+# ------------------------------------------------------------------ client
+async def sse_generate(host: str, port: int, prompt, *, max_new: int = 16,
+                       deadline_s: float = 0.0,
+                       read_delay_s: float = 0.0) -> tuple[list[int], dict]:
+    """POST /generate and consume the SSE stream → (tokens, final-event).
+
+    ``read_delay_s`` sleeps between event reads — test hook to provoke the
+    server-side backpressure cancel."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps({"prompt": [int(t) for t in prompt],
+                       "max_new": max_new,
+                       "deadline_s": deadline_s}).encode()
+    writer.write(f"POST /generate HTTP/1.1\r\nHost: {host}\r\n"
+                 f"Content-Type: application/json\r\n"
+                 f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    await writer.drain()
+    while True:                                   # response headers
+        line = await reader.readline()
+        if line in (b"\r\n", b""):
+            break
+    tokens: list[int] = []
+    final: dict = {}
+    while True:
+        line = await reader.readline()
+        if not line:
+            break
+        line = line.strip()
+        if not line.startswith(b"data:"):
+            continue
+        event = json.loads(line[5:])
+        if "token" in event:
+            tokens.append(int(event["token"]))
+            if read_delay_s:
+                await asyncio.sleep(read_delay_s)
+        if event.get("done"):
+            final = event
+            break
+    writer.close()
+    return tokens, final
+
+
+async def fetch_json(host: str, port: int, path: str) -> dict:
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: {host}\r\n\r\n".encode())
+    await writer.drain()
+    clen = 0
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b""):
+            break
+        key, _, val = line.decode().partition(":")
+        if key.strip().lower() == "content-length":
+            clen = int(val)
+    payload = await reader.readexactly(clen)
+    writer.close()
+    return json.loads(payload)
+
+
+async def drive_http_trace(host: str, port: int,
+                           trace: list[dict]) -> list[dict[str, Any]]:
+    """Replay a Poisson arrival trace against a live server.
+
+    Each trace entry: {"t": arrival-offset-seconds, "prompt": array,
+    "max_new": n, [...]} — returns per-request dicts with the streamed
+    tokens in submission order."""
+
+    async def one(spec: dict) -> dict:
+        await asyncio.sleep(float(spec.get("t", 0.0)))
+        tokens, final = await sse_generate(
+            host, port, spec["prompt"], max_new=int(spec["max_new"]),
+            deadline_s=float(spec.get("deadline_s", 0.0)))
+        return {"uid": spec.get("uid"), "tokens": tokens, "final": final}
+
+    return list(await asyncio.gather(*(one(s) for s in trace)))

@@ -336,6 +336,60 @@ def test_snapshot_device_tree_roundtrips_checkpointer(setup, trace, tmp_path):
     assert outs == baseline
 
 
+def test_sampled_snapshot_restore_bit_identical(setup, trace):
+    """Snapshot/restore parity is not a greedy artifact: with categorical
+    sampling (greedy=False) the engine's PRNG key rides the snapshot, so a
+    restored engine replays the exact sampled continuation."""
+    model, params, _ = setup
+    cfg = ServeConfig(batch_slots=2, max_len=MAX_LEN, scheduler="continuous",
+                      greedy=False, temperature=0.8)
+
+    eng = ServingEngine(model, params, cfg)
+    for s in trace:
+        eng.submit(Request(s["uid"], s["prompt"], max_new=s["max_new"]))
+    for _ in range(4):
+        assert eng.pump()
+    snap = eng.snapshot()
+    assert any(r is not None for r in snap["slots"])
+    snap["device"] = jax.tree.map(lambda l: np.asarray(l), snap["device"])
+    baseline = {r.uid: r.out for r in eng.run()}
+
+    eng2 = ServingEngine(model, params, cfg)
+    eng2.restore(snap)
+    outs = {r.uid: r.out for r in eng2.run()}
+    assert outs == baseline
+
+
+@pytest.mark.parametrize("temperature", [0.0, -1.0, float("nan"),
+                                         float("inf")])
+def test_serve_config_rejects_bad_temperature(temperature):
+    """temperature <= 0 (or non-finite) silently turned categorical
+    sampling into NaN logits before — now rejected at construction."""
+    with pytest.raises(ValueError):
+        ServeConfig(temperature=temperature)
+
+
+def test_run_max_steps_surfaces_partials(setup, trace, oracle):
+    """Exhausting ``max_steps`` returns in-flight and queued requests as
+    partials (done=False) instead of dropping them, and a follow-up run()
+    finishes them bit-identically."""
+    model, params, _ = setup
+    eng = ServingEngine(model, params,
+                        ServeConfig(batch_slots=2, max_len=MAX_LEN,
+                                    scheduler="continuous"))
+    for s in trace:
+        eng.submit(Request(s["uid"], s["prompt"], max_new=s["max_new"]))
+    partial = eng.run(max_steps=2)
+    assert sorted(r.uid for r in partial) == [s["uid"] for s in trace], \
+        "every submitted request must be visible after exhaustion"
+    assert any(not r.done for r in partial), "some must still be in flight"
+    outs = {r.uid: r.out for r in partial if r.done}
+    done = eng.run()                     # partials stay resident: continue
+    assert all(r.done for r in done)
+    outs.update({r.uid: r.out for r in done})
+    assert outs == oracle["dense"]
+
+
 def test_restore_rejects_scheduler_mismatch(setup):
     model, params, _ = setup
     eng = ServingEngine(model, params,

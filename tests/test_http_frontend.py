@@ -1,0 +1,141 @@
+"""SSE streaming front-end e2e (launch/serve.py --http path).
+
+The slow-marked tests start a real asyncio server on an ephemeral port,
+stream over real sockets, and check:
+
+  * per-uid tokens streamed over HTTP from the **paged** engine are
+    bit-identical to the offline batch=1 oracle (the full tentpole stack:
+    pager → paged attention → engine → SSE);
+  * per-request deadlines expire queued/mid-decode requests with
+    ``error="deadline"`` and a well-formed final event;
+  * a client that stops reading trips server-side backpressure
+    (``error="backpressure"``) instead of buffering unboundedly;
+  * /healthz and /stats respond.
+
+The constructor guard (continuous scheduler required) stays in tier-1.
+"""
+from __future__ import annotations
+
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.model_builder import build_model
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve.frontend import (HttpFrontend, drive_http_trace, fetch_json,
+                                  sse_generate)
+
+TINY = ModelConfig(
+    name="http-tiny", family="dense", num_layers=2, d_model=32,
+    num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+    vocab_size=96, dtype="float32")
+
+MAX_LEN = 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _engine(model, params, **over):
+    cfg = dict(batch_slots=2, max_len=MAX_LEN, paged=True, page_size=8)
+    cfg.update(over)
+    return ServingEngine(model, params, ServeConfig(**cfg))
+
+
+def test_frontend_requires_continuous_scheduler(setup):
+    model, params = setup
+    wave = ServingEngine(model, params,
+                         ServeConfig(batch_slots=2, max_len=MAX_LEN,
+                                     scheduler="wave"))
+    with pytest.raises(ValueError):
+        HttpFrontend(wave)
+
+
+@pytest.mark.slow
+def test_http_stream_matches_offline_oracle(setup):
+    model, params = setup
+    rng = np.random.default_rng(5)
+    specs = [{"uid": i,
+              "prompt": rng.integers(0, TINY.vocab_size,
+                                     size=int(rng.integers(3, 10))),
+              "max_new": int(rng.integers(2, 7)),
+              "t": 0.01 * i}
+             for i in range(5)]
+
+    want = {}
+    for s in specs:                      # offline batch=1 oracle
+        eng = _engine(model, params, batch_slots=1)
+        eng.submit(Request(s["uid"], np.asarray(s["prompt"], np.int32),
+                           max_new=s["max_new"]))
+        (req,) = eng.run()
+        want[s["uid"]] = req.out
+
+    async def main():
+        fe = HttpFrontend(_engine(model, params))
+        await fe.start()
+        try:
+            results = await drive_http_trace("127.0.0.1", fe.port, specs)
+            health = await fetch_json("127.0.0.1", fe.port, "/healthz")
+            stats = await fetch_json("127.0.0.1", fe.port, "/stats")
+        finally:
+            await fe.stop()
+        return results, health, stats
+
+    results, health, stats = asyncio.run(main())
+    # uid on the wire is the frontend's own counter; arrival order is the
+    # submission order because drive_http_trace staggers by spec["t"]
+    got = {s["uid"]: r["tokens"] for s, r in zip(specs, results)}
+    assert got == want
+    assert all(r["final"]["done"] and not r["final"]["error"]
+               for r in results)
+    assert all(r["final"]["sent"] == len(r["tokens"]) for r in results)
+    assert health["ok"] and health["queued"] == 0 and health["active"] == 0
+    assert stats["decode_steps"] > 0
+
+
+@pytest.mark.slow
+def test_http_deadline_expires_request(setup):
+    model, params = setup
+
+    async def main():
+        fe = HttpFrontend(_engine(model, params))
+        await fe.start()
+        try:
+            return await sse_generate(
+                "127.0.0.1", fe.port, list(range(4)), max_new=20,
+                deadline_s=1e-4)
+        finally:
+            await fe.stop()
+
+    tokens, final = asyncio.run(main())
+    assert final["error"] == "deadline"
+    assert final["done"] and len(tokens) < 20
+
+
+@pytest.mark.slow
+def test_http_backpressure_cancels_slow_reader(setup):
+    model, params = setup
+
+    async def main():
+        # queue of 1 + throttled egress: decode outruns the stream and the
+        # per-request token queue overflows (kernel socket buffers swallow
+        # these tiny payloads, so real TCP pushback can't trip here)
+        fe = HttpFrontend(_engine(model, params), queue_tokens=1,
+                          drain_delay_s=0.1)
+        await fe.start()
+        try:
+            return await sse_generate(
+                "127.0.0.1", fe.port, list(range(4)), max_new=20)
+        finally:
+            await fe.stop()
+
+    tokens, final = asyncio.run(main())
+    assert final["error"] == "backpressure"
+    assert len(tokens) < 20

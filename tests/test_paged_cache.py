@@ -1,0 +1,311 @@
+"""Paged KV cache correctness (DESIGN.md §12).
+
+Two layers of oracle:
+
+  * decode-level — a paged cache whose table maps each slot to its own
+    page chain is BITWISE identical to the contiguous layout it replaces,
+    for all four variants (GqaCache / QuantGqaCache / MlaCache /
+    QuantMlaCache), because the gather ``pool[table]`` reconstructs the
+    contiguous row in the same lane order and masked lanes contribute an
+    exact softmax 0.0;
+  * engine-level — the paged continuous engine (page faults, COW, prefix
+    reuse, LIFO preemption under pool pressure) serves every request of a
+    mixed trace bit-identically to the batch=1 wave oracle, for dense and
+    NmCompressed-resident params, and ``snapshot()/restore()`` round-trips
+    the page table mid-flight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import PruneConfig, prune_model
+from repro.data.pipeline import calibration_batches
+from repro.models import attention as A
+from repro.models.model_builder import ModelAdapter, build_model
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve.compressed import compress_params
+
+TINY = ModelConfig(
+    name="paged-tiny", family="dense", num_layers=2, d_model=32,
+    num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+    vocab_size=96, dtype="float32")
+
+MLA_TINY = ModelConfig(
+    name="paged-mla-tiny", family="dense", num_layers=2, d_model=32,
+    num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+    vocab_size=96, dtype="float32",
+    q_lora_rank=16, kv_lora_rank=16,
+    qk_nope_head_dim=8, qk_rope_head_dim=8, v_head_dim=16)
+
+MAX_LEN = 32
+PAGE = 8
+PPS = MAX_LEN // PAGE
+
+
+def make_trace(seed: int, n: int, vocab: int) -> list[dict]:
+    rng = np.random.default_rng(seed)
+    return [{"uid": uid,
+             "prompt": rng.integers(
+                 0, vocab, size=int(rng.integers(3, 10))).astype(np.int32),
+             "max_new": int(rng.integers(1, 7))}
+            for uid in range(n)]
+
+
+def serve_alone(model, params, spec: dict) -> list[int]:
+    """Batch=1 wave oracle on the contiguous layout."""
+    eng = ServingEngine(model, params,
+                        ServeConfig(batch_slots=1, max_len=MAX_LEN,
+                                    scheduler="wave"))
+    eng.submit(Request(spec["uid"], spec["prompt"], max_new=spec["max_new"]))
+    (req,) = eng.run()
+    return req.out
+
+
+def serve_paged(model, params, trace, *, slots: int, num_pages: int = 0,
+                prefix_reuse: bool = True):
+    eng = ServingEngine(
+        model, params,
+        ServeConfig(batch_slots=slots, max_len=MAX_LEN, paged=True,
+                    page_size=PAGE, num_pages=num_pages,
+                    prefix_reuse=prefix_reuse))
+    for spec in trace:
+        eng.submit(Request(spec["uid"], spec["prompt"],
+                           max_new=spec["max_new"]))
+    outs = {r.uid: r.out for r in eng.run()}
+    return outs, eng
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = calibration_batches(TINY, num_samples=4, seq_len=8, batch=2)
+    pruned, report = prune_model(
+        params, ModelAdapter(model), batches,
+        PruneConfig(method="magnitude", pattern="nm", n=2, m=4))
+    comp = compress_params(pruned, report.masks, 2, 4)
+    return model, params, comp
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return make_trace(seed=7, n=8, vocab=TINY.vocab_size)
+
+
+@pytest.fixture(scope="module")
+def oracle(setup, trace):
+    model, params, comp = setup
+    return {
+        "dense": {s["uid"]: serve_alone(model, params, s) for s in trace},
+        "comp": {s["uid"]: serve_alone(model, comp, s) for s in trace},
+    }
+
+
+# --------------------------------------------------------------------------
+# decode-level: paged layout == contiguous layout, bitwise
+# --------------------------------------------------------------------------
+def _private_table(B: int) -> jnp.ndarray:
+    """Every slot owns its own page chain: table[b, p] = 1 + b·P + p."""
+    return (1 + jnp.arange(B * PPS, dtype=jnp.int32)).reshape(B, PPS)
+
+
+@pytest.mark.parametrize("kv_dtype", ["", "int8"])
+def test_gqa_paged_decode_matches_contiguous(kv_dtype):
+    cfg = TINY.replace(kv_cache_dtype=kv_dtype) if kv_dtype else TINY
+    B, d = 3, cfg.d_model
+    params = A.gqa_params(jax.random.PRNGKey(1), cfg)
+    cont = A.gqa_cache_init(cfg, B, MAX_LEN)
+    paged = A.gqa_paged_cache_init(
+        cfg, B, num_pages=1 + B * PPS, page_size=PAGE, pages_per_slot=PPS)
+    paged = paged._replace(table=_private_table(B))
+    rng = np.random.default_rng(1)
+    for t in range(2 * PAGE + 3):              # crosses two page boundaries
+        x = jnp.asarray(rng.normal(size=(B, 1, d)), jnp.float32)
+        y_c, cont = A.gqa_decode(params, cfg, x, t, cont, theta=10000.0)
+        y_p, paged = A.gqa_decode(params, cfg, x, t, paged, theta=10000.0)
+        np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_p))
+
+
+@pytest.mark.parametrize("kv_dtype", ["", "int8"])
+def test_mla_paged_decode_matches_contiguous(kv_dtype):
+    cfg = (MLA_TINY.replace(kv_cache_dtype=kv_dtype) if kv_dtype
+           else MLA_TINY)
+    B, d = 2, cfg.d_model
+    params = A.mla_params(jax.random.PRNGKey(1), cfg)
+    cont = A.mla_cache_init(cfg, B, MAX_LEN)
+    paged = A.mla_paged_cache_init(
+        cfg, B, num_pages=1 + B * PPS, page_size=PAGE, pages_per_slot=PPS)
+    paged = paged._replace(table=_private_table(B))
+    rng = np.random.default_rng(1)
+    for t in range(PAGE + 3):
+        x = jnp.asarray(rng.normal(size=(B, 1, d)), jnp.float32)
+        y_c, cont = A.mla_decode(params, cfg, x, t, cont)
+        y_p, paged = A.mla_decode(params, cfg, x, t, paged)
+        np.testing.assert_array_equal(np.asarray(y_c), np.asarray(y_p))
+
+
+# --------------------------------------------------------------------------
+# engine-level: paged trace == batch=1 oracle
+# --------------------------------------------------------------------------
+def test_paged_trace_matches_batch1_dense(setup, trace, oracle):
+    model, params, _ = setup
+    outs, eng = serve_paged(model, params, trace, slots=3)
+    assert outs == oracle["dense"]
+    assert eng.stats["page_faults"] > 0
+
+
+def test_paged_trace_matches_batch1_compressed_resident(setup, trace, oracle):
+    from repro.core.sparsity import NmCompressed
+
+    model, _, comp = setup
+    leaves = [l for l in jax.tree.leaves(
+        comp, is_leaf=lambda x: isinstance(x, NmCompressed))
+        if isinstance(l, NmCompressed)]
+    assert leaves, "fixture must be compressed-resident"
+    outs, _ = serve_paged(model, comp, trace, slots=3)
+    assert outs == oracle["comp"]
+
+
+def test_paged_constrained_pool_preempts_and_stays_exact(setup, trace,
+                                                         oracle):
+    """A pool too small for full residency (LIFO preempt + resume on every
+    collision) still reproduces the batch=1 outputs bit-for-bit."""
+    model, params, _ = setup
+    # 3 slots want 1 + 3·4 = 13 pages; 5 is the progress floor (1 + PPS)
+    outs, eng = serve_paged(model, params, trace, slots=3, num_pages=5,
+                            prefix_reuse=False)
+    assert outs == oracle["dense"]
+    assert eng.stats["preemptions"] > 0, "pool must actually be contended"
+    eng.pager.check()
+
+
+def test_paged_trace_exceeds_contiguous_capacity(setup, trace, oracle):
+    """The headline capacity claim: total trace context exceeds the
+    contiguous ``batch_slots × max_len`` worst-case allocation, yet the
+    paged engine serves it exactly (memory scales with resident tokens)."""
+    model, params, _ = setup
+    slots = 2
+    total_context = sum(len(s["prompt"]) + s["max_new"] for s in trace)
+    assert total_context > slots * MAX_LEN
+    outs, _ = serve_paged(model, params, trace, slots=slots)
+    assert outs == oracle["dense"]
+
+
+def test_paged_sliding_window_mixed_layout(trace):
+    """Windowed layers keep contiguous rings (paging is pointless at O(W));
+    full-attention layers page.  The mix still matches batch=1."""
+    cfg = TINY.replace(sliding_window=6)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    expect = {s["uid"]: serve_alone(model, params, s) for s in trace}
+    outs, eng = serve_paged(model, params, trace, slots=3)
+    assert outs == expect
+    assert eng.pager.prefix is None, \
+        "prefix reuse must auto-disable for windowed models"
+
+
+# --------------------------------------------------------------------------
+# prefix reuse + copy-on-write
+# --------------------------------------------------------------------------
+def test_prefix_reuse_hits_and_stays_exact(setup, oracle):
+    """A repeated prompt skips its prefill via shared pages; output is
+    still the batch=1 answer (divergence handled by COW)."""
+    model, params, _ = setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, TINY.vocab_size, size=9).astype(np.int32)
+    spec = {"uid": 0, "prompt": prompt, "max_new": 5}
+    want = serve_alone(model, params, spec)
+
+    eng = ServingEngine(model, params,
+                        ServeConfig(batch_slots=2, max_len=MAX_LEN,
+                                    paged=True, page_size=PAGE))
+    eng.submit(Request(0, prompt, max_new=5))
+    eng.run()
+    eng.submit(Request(1, prompt, max_new=5))
+    (req,) = eng.run()
+    assert req.out == want
+    assert eng.stats["prefix_hit_tokens"] > 0
+    assert eng.stats["cow_copies"] > 0       # shared partial page diverges
+    eng.pager.check()
+
+
+def test_prefix_partial_match_merges_divergent_page(setup):
+    """Two prompts sharing a full page + part of the next: the sharer keeps
+    the full page, merges the partial one at admission, and both requests
+    match their own batch=1 oracle."""
+    model, params, _ = setup
+    rng = np.random.default_rng(4)
+    head = rng.integers(0, TINY.vocab_size, size=PAGE + 3)
+    a = np.concatenate([head, [1, 2]]).astype(np.int32)
+    b = np.concatenate([head, [3, 4]]).astype(np.int32)   # diverges in-page
+    spec_a = {"uid": 0, "prompt": a, "max_new": 4}
+    spec_b = {"uid": 1, "prompt": b, "max_new": 4}
+    want = {0: serve_alone(model, params, spec_a),
+            1: serve_alone(model, params, spec_b)}
+
+    eng = ServingEngine(model, params,
+                        ServeConfig(batch_slots=1, max_len=MAX_LEN,
+                                    paged=True, page_size=PAGE))
+    eng.submit(Request(0, a, max_new=4))
+    eng.submit(Request(1, b, max_new=4))
+    outs = {r.uid: r.out for r in eng.run()}
+    assert outs == want
+    assert eng.stats["prefix_hit_tokens"] >= PAGE
+    eng.pager.check()
+
+
+# --------------------------------------------------------------------------
+# snapshot / restore round-trips the page table
+# --------------------------------------------------------------------------
+def test_paged_snapshot_restore_bit_identical(setup, trace, oracle):
+    model, params, _ = setup
+    cfg = ServeConfig(batch_slots=2, max_len=MAX_LEN, paged=True,
+                      page_size=PAGE)
+    eng = ServingEngine(model, params, cfg)
+    for s in trace:
+        eng.submit(Request(s["uid"], s["prompt"], max_new=s["max_new"]))
+    for _ in range(4):
+        assert eng.pump()
+    snap = eng.snapshot()
+    assert any(r is not None for r in snap["slots"])   # truly mid-flight
+    snap["device"] = jax.tree.map(lambda l: np.asarray(l), snap["device"])
+
+    eng2 = ServingEngine(model, params, cfg)
+    eng2.restore(snap)
+    outs = {r.uid: r.out for r in eng2.run()}
+    assert outs == oracle["dense"]
+    eng2.pager.check()
+
+
+def test_paged_restore_rejects_layout_mismatch(setup):
+    model, params, _ = setup
+    eng = ServingEngine(model, params,
+                        ServeConfig(batch_slots=2, max_len=MAX_LEN,
+                                    paged=True, page_size=PAGE))
+    snap = eng.snapshot()
+    plain = ServingEngine(model, params,
+                          ServeConfig(batch_slots=2, max_len=MAX_LEN))
+    with pytest.raises(ValueError):
+        plain.restore(snap)
+    other = ServingEngine(model, params,
+                          ServeConfig(batch_slots=2, max_len=MAX_LEN,
+                                      paged=True, page_size=PAGE * 2))
+    with pytest.raises(ValueError):
+        other.restore(snap)
+
+
+# --------------------------------------------------------------------------
+# config validation
+# --------------------------------------------------------------------------
+def test_paged_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(paged=True, scheduler="wave")
+    with pytest.raises(ValueError):
+        ServeConfig(paged=True, max_len=30, page_size=16)   # not divisible
+    with pytest.raises(ValueError):
+        ServeConfig(batch_slots=2, max_len=32, paged=True, page_size=16,
+                    num_pages=2)                 # below 1 + pages_per_slot

@@ -1,0 +1,193 @@
+"""Page-table invariants — hypothesis property tests over random
+admit/fault/retire interleavings, plus deterministic anchors.
+
+Invariants (checked by ``Pager.check()`` after every operation, plus
+end-state assertions):
+
+  * refcount bookkeeping: every page's refcount equals the number of slot
+    table entries pointing at it plus its prefix-cache pin, and the free
+    list holds exactly the zero-ref pages;
+  * no leak: after retiring every slot and draining the prefix cache the
+    pool is empty;
+  * no sharing after COW: once ``fault_in`` returns, the page backing the
+    slot's write position has refcount 1 (exclusively owned);
+  * position bound: a decode position at or beyond
+    ``pages_per_slot × page_size`` is rejected.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serve.pager import SCRATCH, Pager, PoolExhausted
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # optional test dep (pip '.[test]')
+    HAVE_HYPOTHESIS = False
+
+SLOTS, PPS, PAGE = 3, 4, 4        # geometry small enough to contend
+
+
+def _pager(num_pages: int, prefix: bool) -> Pager:
+    return Pager(batch_slots=SLOTS, pages_per_slot=PPS, num_pages=num_pages,
+                 page_size=PAGE, prefix_reuse=prefix)
+
+
+def _drain(pager: Pager) -> None:
+    for slot in range(SLOTS):
+        pager.retire(slot)
+    if pager.prefix is not None:
+        while pager.prefix.evict_one():
+            pass
+    pager.check()
+    assert pager.pool.used_pages == 0, "pages leaked after retire-all"
+    assert (pager.table == SCRATCH).all()
+
+
+def _write_pos(pager: Pager, slot: int) -> int:
+    """Highest logical position the slot's table currently backs."""
+    mapped = int((pager.table[slot] != SCRATCH).sum())
+    return max(0, mapped * PAGE - 1)
+
+
+class _Driver:
+    """Replays an op script against a Pager, modelling the engine's
+    responses: admission failure requeues (no-op here), decode-fault
+    exhaustion preempts the LIFO victim."""
+
+    def __init__(self, num_pages: int, prefix: bool):
+        self.pager = _pager(num_pages, prefix)
+        self.active: dict[int, int] = {}     # slot -> admission order
+        self.seq = 0
+
+    def admit(self, slot: int, tokens: np.ndarray) -> None:
+        if slot in self.active:
+            self.pager.retire(slot)
+            del self.active[slot]
+        try:
+            self.pager.admit(slot, tokens)
+        except PoolExhausted:
+            return                           # engine would requeue
+        self.pager.register(slot, tokens)
+        self.active[slot] = self.seq
+        self.seq += 1
+
+    def fault(self, slot: int, pos: int) -> None:
+        if slot not in self.active:
+            return
+        while True:
+            try:
+                self.pager.fault_in(slot, pos)
+                # exclusivity: the faulted-in write page is privately owned
+                pid = int(self.pager.table[slot, pos // PAGE])
+                assert pid != SCRATCH
+                assert self.pager.pool.refs[pid] == 1, \
+                    "write page still shared after fault_in"
+                return
+            except PoolExhausted:
+                victims = [s for s in self.active if s != slot]
+                if not victims:
+                    return                   # engine floor guarantees this
+                lifo = max(victims, key=lambda s: self.active[s])
+                self.pager.retire(lifo)
+                del self.active[lifo]
+
+    def retire(self, slot: int) -> None:
+        if slot in self.active:
+            self.pager.retire(slot)
+            del self.active[slot]
+
+
+def _run_script(ops, num_pages: int, prefix: bool) -> None:
+    rng = np.random.default_rng(0)
+    drv = _Driver(num_pages, prefix)
+    for kind, slot, a, b in ops:
+        if kind == 0:
+            tokens = rng.integers(0, 64, size=1 + a % (PPS * PAGE))
+            drv.admit(slot, tokens.astype(np.int32))
+        elif kind == 1:
+            drv.fault(slot, (a * PAGE + b) % (PPS * PAGE))
+        else:
+            drv.retire(slot)
+        drv.pager.check()
+    _drain(drv.pager)
+
+
+# --------------------------------------------------------------------------
+# deterministic anchors (always run; no hypothesis needed)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("prefix", [False, True])
+def test_no_leak_after_retire_all(prefix):
+    _run_script([(0, s, 7 + 3 * s, 0) for s in range(SLOTS)]
+                + [(1, s, p, 1) for s in range(SLOTS) for p in range(2)]
+                + [(2, s, 0, 0) for s in range(SLOTS)],
+                num_pages=1 + SLOTS * PPS, prefix=prefix)
+
+
+def test_cow_unshares_the_write_page():
+    pager = _pager(1 + SLOTS * PPS, prefix=True)
+    prompt = np.arange(PAGE + 2, dtype=np.int32)     # full page + partial
+    pager.admit(0, prompt)
+    pager.register(0, prompt)
+    plan = pager.admit(1, prompt)                    # full-prefix sharer
+    assert plan.n_shared_tok == len(prompt)
+    shared_pid = int(pager.table[1, 1])
+    # admission already merged the partial page into a fresh copy for the
+    # tail-replay; the FULL page is shared until slot 1 writes into it…
+    assert pager.table[0, 0] == pager.table[1, 0]
+    full_pid = int(pager.table[0, 0])
+    assert pager.pool.refs[full_pid] >= 2
+    # …which never happens (pos only grows); slot 1's write page is private
+    ops = pager.fault_in(1, len(prompt))
+    pid = int(pager.table[1, (len(prompt)) // PAGE])
+    assert pager.pool.refs[pid] == 1
+    assert shared_pid == pid or all(s != pid for s, _ in ops)
+    pager.check()
+    _drain(pager)
+
+
+def test_position_beyond_slot_capacity_rejected():
+    pager = _pager(1 + SLOTS * PPS, prefix=False)
+    pager.admit(0, np.arange(4, dtype=np.int32))
+    with pytest.raises(AssertionError):
+        pager.fault_in(0, PPS * PAGE)                # == capacity: invalid
+    pager.retire(0)
+
+
+def test_constrained_pool_progress_floor():
+    """With only 1 + PPS pages a single slot can always run to the end of
+    its capacity once rivals are preempted."""
+    drv = _Driver(1 + PPS, prefix=False)
+    for s in range(SLOTS):
+        drv.admit(s, np.arange(3, dtype=np.int32))
+    for p in range(PPS):
+        drv.fault(0, p * PAGE)
+        drv.pager.check()
+    assert 0 in drv.active
+    _drain(drv.pager)
+
+
+# --------------------------------------------------------------------------
+# hypothesis properties
+# --------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    OPS = st.lists(
+        st.tuples(st.integers(0, 2),             # admit / fault / retire
+                  st.integers(0, SLOTS - 1),
+                  st.integers(0, PPS * PAGE - 1),
+                  st.integers(0, PAGE - 1)),
+        min_size=1, max_size=30)
+    COMMON = dict(max_examples=25, deadline=None,
+                  suppress_health_check=[HealthCheck.too_slow])
+
+    @given(ops=OPS, pages=st.integers(1 + PPS, 1 + SLOTS * PPS),
+           prefix=st.booleans())
+    @settings(**COMMON)
+    def test_pager_invariants_random_interleavings(ops, pages, prefix):
+        _run_script(ops, num_pages=pages, prefix=prefix)
+else:                                     # keep the skip visible in reports
+    @pytest.mark.skip(reason="optional test dep: pip install '.[test]'")
+    def test_pager_invariants_hypothesis_missing():
+        pass

@@ -8,7 +8,9 @@ Invariants:
     sum(max_new) + n_requests + 1 scheduling quanta;
   * per-slot ``pos`` never reaches ``max_len``;
   * wave and continuous scheduling produce identical per-uid token
-    sequences under greedy decoding.
+    sequences under greedy decoding;
+  * the paged KV cache (including a pool at the preemption floor) matches
+    the contiguous schedulers token-for-token.
 """
 from __future__ import annotations
 
@@ -86,6 +88,21 @@ def _serve(spec, seed, slots, scheduler) -> dict[int, tuple]:
     return {r.uid: tuple(r.out) for r in eng.run()}
 
 
+def _serve_paged(spec, seed, slots, *, num_pages=0) -> dict[int, tuple]:
+    """Continuous scheduler on the paged KV cache (page_size 4 → 4 pages
+    per slot; a small ``num_pages`` forces faults/preemption)."""
+    model, params = _model()
+    eng = ServingEngine(
+        model, params,
+        ServeConfig(batch_slots=slots, max_len=MAX_LEN, paged=True,
+                    page_size=4, num_pages=num_pages))
+    for r in _requests(spec, seed):
+        eng.submit(r)
+    outs = {r.uid: tuple(r.out) for r in eng.run()}
+    eng.pager.check()
+    return outs
+
+
 # --------------------------------------------------------------------------
 # deterministic anchors (always run; no hypothesis needed)
 # --------------------------------------------------------------------------
@@ -105,6 +122,19 @@ def test_single_slot_continuous_is_fifo_exact():
     the wave batch=1 oracle request-for-request."""
     spec = [(3, 3), (2, 2), (4, 4)]
     assert _serve(spec, 2, 1, "continuous") == _serve(spec, 2, 1, "wave")
+
+
+def test_paged_agrees_with_contiguous_anchor():
+    spec = [(2, 3), (4, 2), (2, 1), (3, 4)]
+    assert _serve_paged(spec, 1, 2) == _serve(spec, 1, 2, "continuous")
+
+
+def test_paged_constrained_pool_agrees_anchor():
+    """A pool at the progress floor (1 + pages_per_slot) preempts under
+    contention yet still matches the contiguous scheduler bit-for-bit."""
+    spec = [(3, 4), (4, 4), (2, 4), (4, 3), (3, 2)]
+    assert (_serve_paged(spec, 0, 2, num_pages=5)
+            == _serve(spec, 0, 2, "continuous"))
 
 
 # --------------------------------------------------------------------------
@@ -127,6 +157,12 @@ if HAVE_HYPOTHESIS:
     def test_wave_vs_continuous_identical_tokens(spec, slots, seed):
         assert (_serve(spec, seed, slots, "wave")
                 == _serve(spec, seed, slots, "continuous"))
+
+    @given(spec=SPECS, slots=st.integers(1, 3), seed=st.integers(0, 3))
+    @settings(**COMMON)
+    def test_paged_vs_wave_identical_tokens(spec, slots, seed):
+        assert (_serve_paged(spec, seed, slots)
+                == _serve(spec, seed, slots, "wave"))
 else:                                     # keep the skip visible in reports
     @pytest.mark.skip(reason="optional test dep: pip install '.[test]'")
     def test_scheduler_invariants_hypothesis_missing():
