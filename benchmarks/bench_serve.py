@@ -190,28 +190,57 @@ def make_arrival_trace(seed: int, n: int, vocab: int,
     return trace
 
 
-def _drive_trace(engine, trace) -> tuple[float, list]:
-    """Submit requests as virtual time passes; drain; → (wall_s, requests)."""
+def _drive_trace(runner, trace) -> tuple[float, list]:
+    """Submit requests as virtual time passes; drain; → (wall_s, requests).
+
+    ``runner`` is a ServingEngine or a Supervisor wrapping one (same
+    submit/pump/idle/run surface); virtual time lives on the engine either
+    way.  Under a supervisor, read results from ``runner.results()`` — the
+    returned Request objects can be stale after a rollback (the engine
+    continues on internal clones)."""
     from repro.serve import Request
 
+    engine = getattr(runner, "engine", runner)
     reqs = [Request(t["uid"], t["prompt"], max_new=t["max_new"])
             for t in trace]
     i = 0
     t0 = time.perf_counter()
-    while i < len(reqs) or not engine.idle():
+    while i < len(reqs) or not runner.idle():
         while i < len(reqs) and trace[i]["arrival"] <= engine.stats["vtime"]:
-            engine.submit(reqs[i])
+            runner.submit(reqs[i])
             i += 1
-        if not engine.pump():
+        if not runner.pump():
             if i >= len(reqs):
                 break
             # idle with future arrivals: fast-forward the virtual clock
             engine.stats["vtime"] = trace[i]["arrival"]
-    engine.run()                       # drain bookkeeping (already idle)
+    runner.run()                       # drain bookkeeping (already idle)
     return time.perf_counter() - t0, reqs
 
 
 TRACE_PAGE_SIZE = 16
+
+
+def _trace_setup(d: int, n_requests: int, slots: int, seed: int):
+    """Shared fixture for the trace benchmarks: compressed-resident params,
+    the Poisson arrival trace, and the (contiguous, paged) geometries."""
+    cfg = bench_config(d)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = calibration_batches(cfg, num_samples=4, seq_len=16, batch=4)
+    pruned, report = prune_model(
+        params, ModelAdapter(model), batches,
+        PruneConfig(method="magnitude", pattern="nm", n=2, m=4))
+    comp = compress_params(pruned, report.masks, 2, 4)
+    trace = make_arrival_trace(seed, n_requests, cfg.vocab_size)
+    max_len = max(TRACE_LENS) + max(MAX_NEW_MIX[0]) + 2
+
+    ps = TRACE_PAGE_SIZE
+    paged_max_len = max_len + (-max_len) % ps          # round up to pages
+    pps = paged_max_len // ps
+    # two pages short of full residency: faults/COW/preemption run for real
+    num_pages = max(1 + pps, 1 + slots * pps - 2)
+    return model, comp, trace, max_len, paged_max_len, num_pages
 
 
 def run_trace(*, d: int, n_requests: int, slots: int, seed: int = 0,
@@ -223,23 +252,10 @@ def run_trace(*, d: int, n_requests: int, slots: int, seed: int = 0,
     decorative.  All three must agree per-uid (greedy bit-parity)."""
     from repro.serve import ServeConfig, ServingEngine
 
-    cfg = bench_config(d)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    batches = calibration_batches(cfg, num_samples=4, seq_len=16, batch=4)
-    pruned, report = prune_model(
-        params, ModelAdapter(model), batches,
-        PruneConfig(method="magnitude", pattern="nm", n=2, m=4))
-    comp = compress_params(pruned, report.masks, 2, 4)
-    trace = make_arrival_trace(seed, n_requests, cfg.vocab_size)
-    max_len = max(TRACE_LENS) + max(MAX_NEW_MIX[0]) + 2
+    model, comp, trace, max_len, paged_max_len, num_pages = _trace_setup(
+        d, n_requests, slots, seed)
     total_context = sum(len(t["prompt"]) + t["max_new"] for t in trace)
-
     ps = TRACE_PAGE_SIZE
-    paged_max_len = max_len + (-max_len) % ps          # round up to pages
-    pps = paged_max_len // ps
-    # two pages short of full residency: faults/COW/preemption run for real
-    num_pages = max(1 + pps, 1 + slots * pps - 2)
 
     def make_engine(variant):
         paged = variant == "paged"
@@ -324,6 +340,92 @@ def run_trace(*, d: int, n_requests: int, slots: int, seed: int = 0,
     return rows
 
 
+# --------------------------------------------------------------------------
+# chaos: the same paged trace under a fixed seeded fault plan
+# --------------------------------------------------------------------------
+# ≥3 fault types mid-trace: two NaN-logit decode steps, one admission OOM,
+# and a pool-exhaustion burst long enough (2×slots) to defeat the engine's
+# preempt-retry loop and escape to the supervisor twice
+CHAOS_PLAN = "decode_logits@25;decode_logits@70;prefill@5;pager_fault_in@40x8"
+
+
+def run_chaos(*, d: int, n_requests: int, slots: int, seed: int = 0,
+              reps: int = 3, verbose=True) -> list[dict]:
+    """Serve the Poisson trace on the supervised paged engine under the
+    fixed ``CHAOS_PLAN`` fault schedule: every fault recovers by rollback +
+    replay, zero requests are dropped or quarantined, and per-uid outputs
+    stay **bitwise identical** to the fault-free run (asserted, not
+    sampled).  Reported goodput is delivered tokens over wall time; the
+    waste column counts decode steps discarded by rollbacks."""
+    from repro.serve import (FaultPlan, ServeConfig, ServingEngine,
+                             Supervisor, SupervisorConfig)
+
+    model, comp, trace, _, paged_max_len, num_pages = _trace_setup(
+        d, n_requests, slots, seed)
+
+    def make_engine():
+        return ServingEngine(
+            model, comp,
+            ServeConfig(batch_slots=slots, max_len=paged_max_len,
+                        scheduler="continuous", paged=True,
+                        page_size=TRACE_PAGE_SIZE, num_pages=num_pages))
+
+    # fault-free oracle (also the untimed compile warm-up)
+    _, oracle_reqs = _drive_trace(make_engine(), trace)
+    oracle = {r.uid: list(r.out) for r in oracle_reqs}
+    delivered_tokens = sum(len(o) for o in oracle.values())
+
+    runs = []                     # median-of-reps (same protocol as timeit)
+    for _ in range(max(1, reps)):
+        plan = FaultPlan.parse(CHAOS_PLAN, seed=seed)
+        sup = Supervisor(
+            make_engine(),
+            SupervisorConfig(snapshot_every=8, retry_budget=10),
+            faults=plan)
+        wall, _ = _drive_trace(sup, trace)
+        results = {r.uid: list(r.out) for r in sup.results()}
+        fired = plan.fired_by_site()
+        assert len(fired) >= 3, f"chaos plan only fired {fired}"
+        assert sup.quarantined == [], "chaos trace must not quarantine"
+        assert results == oracle, \
+            "post-recovery outputs diverged from the fault-free trace"
+        runs.append((wall, sup, fired))
+    runs.sort(key=lambda r: r[0])
+    wall, sup, fired = runs[len(runs) // 2]
+    st = sup.engine.stats
+    sst = sup.stats
+    row = {
+        "variant": "trace_chaos",
+        "d_model": d, "batch_slots": slots, "requests": n_requests,
+        "trace_seed": seed, "fault_plan": CHAOS_PLAN,
+        "wall_s": wall,
+        "tokens_per_s": delivered_tokens / wall,
+        "goodput_tokens_per_s": delivered_tokens / wall,
+        "requests_per_s": n_requests / wall,
+        "dropped_requests": n_requests - len(oracle),
+        "quarantined": sst["quarantined"],
+        "recoveries": sst["recoveries"],
+        "faults_by_type": dict(sst["faults"]),
+        "fired_by_site": fired,
+        "decode_steps": st["decode_steps"],
+        "wasted_decode_steps": sst["rollback_decode_steps"],
+        "goodput_step_fraction": (
+            1.0 - sst["rollback_decode_steps"] / max(1, st["decode_steps"])),
+        "replayed_requests": sst["replayed_requests"],
+        "snapshots": sst["snapshots"],
+        "outputs_identical_to_fault_free": True,     # asserted above
+    }
+    if verbose:
+        print(f"chaos d={d} slots={slots} n={n_requests} "
+              f"plan '{CHAOS_PLAN}':", flush=True)
+        print(f"  trace_chaos        {row['tokens_per_s']:7.1f} tok/s "
+              f"goodput  ({row['recoveries']} recoveries, "
+              f"{row['wasted_decode_steps']}/{row['decode_steps']} steps "
+              f"rolled back, {row['replayed_requests']} replays, "
+              f"0 dropped)", flush=True)
+    return [row]
+
+
 def _git_rev() -> str:
     try:
         return subprocess.run(
@@ -341,6 +443,11 @@ def main() -> None:
     ap.add_argument("--trace", action="store_true",
                     help="add the mixed-length Poisson-arrival serving "
                          "trace (continuous vs wave scheduler)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add the supervised paged trace under the fixed "
+                         "CHAOS_PLAN fault schedule (goodput + recovery "
+                         "accounting; outputs asserted bitwise equal to "
+                         "the fault-free run)")
     ap.add_argument("--iters", type=int, default=5)
     ap.add_argument("--warmup", type=int, default=1)
     ap.add_argument("--out", default="",
@@ -360,6 +467,11 @@ def main() -> None:
     if args.trace:
         trace_rows = (run_trace(d=64, n_requests=16, slots=4) if args.quick
                       else run_trace(d=128, n_requests=32, slots=4))
+
+    chaos_rows: list[dict] = []
+    if args.chaos:
+        chaos_rows = (run_chaos(d=64, n_requests=16, slots=4) if args.quick
+                      else run_chaos(d=128, n_requests=32, slots=4))
 
     by_key: dict[tuple, dict] = {}
     for r in rows:
@@ -409,6 +521,23 @@ def main() -> None:
                 "cache_capacity_tokens", "contiguous_capacity_tokens",
                 "trace_total_context_tokens")},
         }
+    if chaos_rows:
+        (chaos,) = chaos_rows
+        record["results"].extend(chaos_rows)
+        record["chaos"] = {
+            "fault_plan": chaos["fault_plan"],
+            "goodput_tokens_per_s": chaos["goodput_tokens_per_s"],
+            "goodput_step_fraction": chaos["goodput_step_fraction"],
+            "recoveries": chaos["recoveries"],
+            "dropped_requests": chaos["dropped_requests"],
+            "quarantined": chaos["quarantined"],
+            "outputs_identical_to_fault_free": True,
+        }
+        if trace_rows:
+            paged = next(r for r in trace_rows
+                         if r["variant"] == "trace_paged")
+            record["chaos"]["chaos_vs_paged_tokens_per_s"] = (
+                chaos["tokens_per_s"] / paged["tokens_per_s"])
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)
         f.write("\n")

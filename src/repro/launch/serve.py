@@ -17,6 +17,16 @@ become shared page pools sized by ``--num-pages``, with prompt-prefix
 reuse across requests.  ``--http`` starts the SSE streaming front-end
 instead of the offline batch run and drives the same request mix over
 HTTP with Poisson arrivals (``--deadline`` attaches per-request budgets).
+
+``--supervise`` (implied by any of ``--fault-plan``, ``--snapshot-every``,
+``--retry-budget``) wraps the engine in the fault supervisor
+(DESIGN.md §13): periodic snapshots, rollback + bit-identical replay on
+decode/prefill/pager faults, retry budgets with poison-request
+quarantine.  ``--fault-plan`` arms a deterministic fault schedule — a
+JSON file or the compact ``site@start[xburst][~uid][+payload]`` syntax,
+e.g. ``--fault-plan 'decode_logits@5;pager_fault_in@9x8'``.
+``--max-queued`` bounds admission (HTTP 503 + Retry-After past it) and
+``--drain-timeout`` finishes in-flight requests at shutdown.
 """
 from __future__ import annotations
 
@@ -69,7 +79,28 @@ def main():
                     help="listen port (0 = ephemeral)")
     ap.add_argument("--deadline", type=float, default=0.0,
                     help="per-request deadline in seconds (0 = none)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="wrap the engine in the fault supervisor "
+                         "(serve/supervisor.py)")
+    ap.add_argument("--fault-plan", default="",
+                    help="arm a fault plan: JSON file path or compact "
+                         "'site@start[xburst][~uid][+payload];…' spec "
+                         "(implies --supervise)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="pumps between supervisor snapshots (0 = default; "
+                         "> 0 implies --supervise)")
+    ap.add_argument("--retry-budget", type=int, default=0,
+                    help="faults a request survives before quarantine "
+                         "(0 = default; > 0 implies --supervise)")
+    ap.add_argument("--max-queued", type=int, default=0,
+                    help="bound the request queue; past it submissions are "
+                         "rejected (HTTP: 503 + Retry-After)")
+    ap.add_argument("--drain-timeout", type=float, default=5.0,
+                    help="seconds to finish in-flight requests at HTTP "
+                         "shutdown (drain mode)")
     args = ap.parse_args()
+    args.supervise = (args.supervise or bool(args.fault_plan)
+                      or args.snapshot_every > 0 or args.retry_budget > 0)
 
     cfg = registry.get_config(args.arch, reduced=True)
     model = build_model(cfg)
@@ -111,28 +142,39 @@ def main():
         model, params,
         ServeConfig(batch_slots=args.slots,
                     max_len=max_len,
-                    scheduler="continuous" if args.http else args.scheduler,
+                    scheduler=("continuous"
+                               if args.http or args.supervise
+                               else args.scheduler),
                     nm_impl=args.nm_impl,
                     nm_block_b=args.nm_block_b,
                     nm_block_c=args.nm_block_c,
                     paged=args.paged,
                     page_size=args.page_size,
-                    num_pages=args.num_pages),
+                    num_pages=args.num_pages,
+                    max_queued=args.max_queued),
     )
+    supervisor = _make_supervisor(engine, args) if args.supervise else None
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
                for _ in range(args.requests)]
 
     if args.http:
-        _serve_http(engine, args, prompts)
+        _serve_http(engine, args, prompts, supervisor)
         return
 
+    runner = supervisor if supervisor is not None else engine
     for uid, prompt in enumerate(prompts):
-        engine.submit(Request(uid, prompt, max_new=args.max_new,
+        runner.submit(Request(uid, prompt, max_new=args.max_new,
                               deadline_s=args.deadline))
     t0 = time.perf_counter()
-    done = engine.run()
+    done = runner.run()
     dt = time.perf_counter() - t0
+    if supervisor is not None:
+        st = supervisor.stats
+        print(f"supervisor: state={supervisor.state} "
+              f"recoveries={st['recoveries']} faults={st['faults']} "
+              f"snapshots={st['snapshots']} "
+              f"quarantined={supervisor.quarantined}")
     tokens = sum(len(r.out) for r in done)
     st = engine.stats
     occ = (st["busy_slot_steps"] / (st["decode_steps"] * args.slots)
@@ -151,7 +193,23 @@ def main():
         print(f"  req {r.uid}: {r.out}")
 
 
-def _serve_http(engine, args, prompts):
+def _make_supervisor(engine, args):
+    from repro.serve.faults import FaultPlan
+    from repro.serve.supervisor import Supervisor, SupervisorConfig
+
+    plan = FaultPlan.load(args.fault_plan) if args.fault_plan else None
+    kw = {}
+    if args.snapshot_every > 0:
+        kw["snapshot_every"] = args.snapshot_every
+    if args.retry_budget > 0:
+        kw["retry_budget"] = args.retry_budget
+    if plan is not None:
+        print(f"fault plan armed: {len(plan.specs)} spec(s), "
+              f"seed {plan.seed}")
+    return Supervisor(engine, SupervisorConfig(**kw), faults=plan)
+
+
+def _serve_http(engine, args, prompts, supervisor=None):
     """Start the SSE front-end and replay the mix with Poisson arrivals."""
     from repro.serve.frontend import HttpFrontend, drive_http_trace
 
@@ -162,20 +220,26 @@ def _serve_http(engine, args, prompts):
              for i, p in enumerate(prompts)]
 
     async def main():
-        fe = HttpFrontend(engine, port=args.http_port)
+        fe = HttpFrontend(engine, supervisor=supervisor, port=args.http_port)
         await fe.start()
         print(f"SSE front-end on http://127.0.0.1:{fe.port} — replaying "
               f"{len(trace)} Poisson arrivals…")
         t0 = time.perf_counter()
         results = await drive_http_trace("127.0.0.1", fe.port, trace)
         dt = time.perf_counter() - t0
-        await fe.stop()
+        drained = await fe.stop(drain_timeout_s=args.drain_timeout)
         tokens = sum(len(r["tokens"]) for r in results)
         errors = [r["final"].get("error") for r in results
                   if r["final"].get("error")]
         print(f"{len(results)} streams, {tokens} tokens in {dt:.2f}s "
               f"({tokens / dt:.1f} tok/s over HTTP incl. compile; "
-              f"{len(errors)} errored: {errors[:4]})")
+              f"{len(errors)} errored: {errors[:4]}; "
+              f"drained={'yes' if drained else 'timeout'})")
+        if supervisor is not None:
+            st = supervisor.stats
+            print(f"supervisor: state={supervisor.state} "
+                  f"recoveries={st['recoveries']} faults={st['faults']} "
+                  f"quarantined={supervisor.quarantined}")
         for r in results[:4]:
             print(f"  req {r['uid']}: {r['tokens']}")
 

@@ -1,11 +1,21 @@
-"""Serving: batched prefill/decode engine, paged KV allocator + n:m
-compressed decode weights."""
+"""Serving: batched prefill/decode engine, paged KV allocator, n:m
+compressed decode weights, and fault-supervised recovery."""
 from repro.serve.engine import Request, ServeConfig, ServingEngine
 from repro.serve.compressed import compress_params, decompress_params
-from repro.serve.pager import Pager, PagePool, PoolExhausted, PrefixCache
+from repro.serve.faults import (DeviceOom, EngineDown, EngineFault,
+                                FaultPlan, FaultSpec, InjectedFault,
+                                NonFiniteLogits, QueueFull,
+                                SnapshotWriteError, StepDeadlineExceeded)
+from repro.serve.pager import (Pager, PagePool, PagerAuditError,
+                               PoolExhausted, PrefixCache)
+from repro.serve.supervisor import Supervisor, SupervisorConfig
 
 __all__ = [
     "Request", "ServeConfig", "ServingEngine",
     "compress_params", "decompress_params",
-    "Pager", "PagePool", "PoolExhausted", "PrefixCache",
+    "Pager", "PagePool", "PagerAuditError", "PoolExhausted", "PrefixCache",
+    "FaultPlan", "FaultSpec", "EngineFault", "InjectedFault", "DeviceOom",
+    "NonFiniteLogits", "StepDeadlineExceeded", "SnapshotWriteError",
+    "EngineDown", "QueueFull",
+    "Supervisor", "SupervisorConfig",
 ]

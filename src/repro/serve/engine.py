@@ -59,6 +59,8 @@ import numpy as np
 from repro.kernels.ops import NmKernelConfig
 from repro.models import attention as A
 from repro.models import layers as L
+from repro.serve.faults import (DeviceOom, FaultPlan, NonFiniteLogits,
+                                QueueFull)
 from repro.serve.pager import Pager, PoolExhausted, SCRATCH
 
 Array = jax.Array
@@ -105,8 +107,19 @@ class ServeConfig:
     page_size: int = 16      # tokens per page; must divide max_len
     num_pages: int = 0       # 0 = auto: 1 + batch_slots · max_len/page_size
     prefix_reuse: bool = True  # share prompt pages across requests (COW)
+    # admission control: > 0 bounds the request queue — submit() raises
+    # QueueFull instead of accepting unbounded backlog (the front-end maps
+    # it to 503 + Retry-After; load shedding rejects new work before
+    # evicting resident work)
+    max_queued: int = 0
+    # paranoia tier: run the pager's refcount audit after every continuous
+    # step (the supervisor additionally audits after every recovery)
+    debug_checks: bool = False
 
     def __post_init__(self):
+        if self.max_queued < 0:
+            raise ValueError(f"max_queued must be >= 0 (0 = unbounded), "
+                             f"got {self.max_queued}")
         if not (math.isfinite(self.temperature) and self.temperature > 0):
             raise ValueError(
                 f"temperature must be a finite positive float, got "
@@ -288,6 +301,10 @@ class ServingEngine:
         # admission recency per slot — preemption victims are LIFO
         self._seq = 0
         self._slot_seq = [0] * cfg.batch_slots
+        # fault injection + watchdog: both default off and cost one
+        # attribute load per step until armed (serve/faults.py contract)
+        self.faults: FaultPlan | None = None
+        self.watch_logits = False
         self.pager: Pager | None = None
         if cfg.paged:
             if not hasattr(model, "init_paged_cache"):
@@ -305,6 +322,13 @@ class ServingEngine:
                 batch_slots=cfg.batch_slots, pages_per_slot=self._pps,
                 num_pages=self._num_pages, page_size=cfg.page_size,
                 prefix_reuse=prefix)
+
+    def arm_faults(self, plan: FaultPlan | None) -> None:
+        """Arm (or disarm with None) a fault plan on the engine and, when
+        paged, on the pager's fault-in path."""
+        self.faults = plan
+        if self.pager is not None:
+            self.pager.faults = plan
 
     @staticmethod
     def _resolve_nm_kernel(model, cfg: ServeConfig) -> NmKernelConfig | None:
@@ -343,11 +367,18 @@ class ServingEngine:
             req.on_token(req, token)
 
     # ----------------------------------------------------------- main loop
-    def submit(self, req: Request):
+    def submit(self, req: Request, *, force: bool = False):
         if len(req.prompt) + 1 > self.cfg.max_len:
             raise ValueError(
                 f"request {req.uid}: prompt length {len(req.prompt)} does "
                 f"not fit max_len={self.cfg.max_len} (need prompt + 1)")
+        if (not force and self.cfg.max_queued
+                and len(self.queue) >= self.cfg.max_queued):
+            # ~one queue drain per resident generation as the backoff hint
+            raise QueueFull(
+                f"request {req.uid} rejected: queue at max_queued="
+                f"{self.cfg.max_queued}",
+                retry_after_s=max(1.0, 0.1 * len(self.queue)))
         if req.t_submit < 0:
             req.t_submit = time.perf_counter()
         self.queue.append(req)
@@ -458,6 +489,13 @@ class ServingEngine:
         (under greedy; sampled runs re-split the RNG per emitted token).
         """
         req = self.queue[0]
+        if self.faults is not None and \
+                self.faults.fire("prefill", uid=req.uid) is not None:
+            # before any engine/pager state mutation: the request stays
+            # queued, exactly like a real allocator failure at prefill entry
+            raise DeviceOom(
+                f"injected RESOURCE_EXHAUSTED: out of memory while "
+                f"prefilling request {req.uid}", site="prefill", uid=req.uid)
         self._ensure_state()
         prompt = np.asarray(req.prompt, np.int32)
         resumed = len(req.out) > 0
@@ -611,6 +649,19 @@ class ServingEngine:
         logits, self._cache = self._decode(
             self.params, self._cache,
             jnp.asarray(self._tokens), jnp.asarray(self._pos))
+        if self.faults is not None:
+            stall = self.faults.fire("decode_stall")
+            if stall is not None:
+                time.sleep(stall.payload)
+            if self.faults.fire("decode_logits") is not None:
+                logits = jnp.full_like(logits, jnp.nan)
+        if self.watch_logits and not bool(jnp.isfinite(logits).all()):
+            # raise BEFORE any token is absorbed: the poisoned step's cache
+            # write is rolled back by the supervisor's snapshot restore, and
+            # no request ever sees a garbage token
+            raise NonFiniteLogits(
+                f"decode step {self.stats['decode_steps']} produced "
+                f"non-finite logits", site="decode_logits")
         nxt = np.asarray(self._select(logits))
         self.stats["decode_steps"] += 1
         self.stats["busy_slot_steps"] += len(active)
@@ -628,6 +679,8 @@ class ServingEngine:
                 self._retire(slot)
             else:
                 self._pos[slot] += 1
+        if self.cfg.debug_checks and self.pager is not None:
+            self.pager.check()
         return True
 
     # ------------------------------------------------------ wave scheduler
@@ -735,6 +788,7 @@ class ServingEngine:
             "max_len": self.cfg.max_len,
             "paged": self.cfg.paged,
             "page_size": self.cfg.page_size if self.cfg.paged else 0,
+            "num_pages": self._num_pages if self.cfg.paged else 0,
             "pager": None if self.pager is None else self.pager.snapshot(),
             "device": {
                 "cache": (None if self._cache is None
@@ -778,6 +832,12 @@ class ServingEngine:
             raise ValueError(
                 f"snapshot page_size={snap.get('page_size')} does not match "
                 f"engine page_size={self.cfg.page_size}")
+        if self.cfg.paged and \
+                snap.get("num_pages", self._num_pages) != self._num_pages:
+            raise ValueError(
+                f"snapshot num_pages={snap.get('num_pages')} does not match "
+                f"engine num_pages={self._num_pages} — page ids in the "
+                f"snapshot would mis-index this pool")
         if self.pager is not None:
             self.pager.restore(snap["pager"])
         dev = snap["device"]

@@ -50,6 +50,21 @@ class PoolExhausted(RuntimeError):
     """No free page and nothing evictable — caller must retire/preempt."""
 
 
+class PagerAuditError(ValueError):
+    """The refcount audit found a leaked or over-referenced page.
+
+    ``page`` is the offending physical page id (or -1 for a free-list
+    inconsistency); ``expected``/``actual`` are the refcounts the table +
+    prefix pins imply vs what the pool carries."""
+
+    def __init__(self, msg: str, *, page: int = -1,
+                 expected: int = -1, actual: int = -1):
+        super().__init__(msg)
+        self.page = page
+        self.expected = expected
+        self.actual = actual
+
+
 class PagePool:
     """Refcounted fixed-size page allocator (page 0 reserved)."""
 
@@ -210,6 +225,9 @@ class Pager:
         self.prefix = (PrefixCache(self.pool, max_prefix_entries)
                        if prefix_reuse else None)
         self.dirty = True
+        # fault injection (serve/faults.py): armed by the engine; no-op
+        # and zero-cost (one attribute load in fault_in) until then
+        self.faults = None
 
     # ------------------------------------------------------------ alloc
     def _alloc(self) -> int:
@@ -290,6 +308,13 @@ class Pager:
         start at the page head, so stale content stays masked).  Raises
         PoolExhausted with no state change.
         """
+        if self.faults is not None and \
+                self.faults.fire("pager_fault_in") is not None:
+            # a long enough burst outlasts the engine's preempt-and-retry
+            # loop and escapes to the supervisor as a real exhaustion
+            raise PoolExhausted(
+                f"injected fault: page pool exhausted faulting in slot "
+                f"{slot} pos {pos}")
         lp = pos // self.pool.page_size
         assert lp < self.pages_per_slot, f"pos {pos} beyond slot capacity"
         pid = int(self.table[slot, lp])
@@ -320,9 +345,14 @@ class Pager:
         self.table[slot] = SCRATCH
         self.dirty = True
 
-    # ------------------------------------------------------------ testing
+    # ------------------------------------------------------------ auditing
     def check(self) -> None:
-        """Assert the refcount/free-list invariants (test helper)."""
+        """Audit the refcount/free-list invariants.
+
+        Raises :class:`PagerAuditError` naming the leaked / over-referenced
+        page.  Test-only historically; the supervisor now runs it after
+        every recovery/restore, and ``ServeConfig(debug_checks=True)`` runs
+        it after every continuous step."""
         want = np.zeros(self.pool.num_pages, np.int64)
         want[SCRATCH] = 1
         for pid in self.table.ravel():
@@ -333,21 +363,43 @@ class Pager:
                 for pid in e["pages"]:
                     want[pid] += 1
         free = set(self.pool._free)
-        assert len(free) == len(self.pool._free), "free list duplicates"
+        if len(free) != len(self.pool._free):
+            dup = [p for p in free if self.pool._free.count(p) > 1]
+            raise PagerAuditError(
+                f"free list holds duplicate page(s) {dup}", page=dup[0])
         for pid in range(self.pool.num_pages):
             if pid in free:
-                assert want[pid] == 0 and self.pool.refs[pid] == 0, \
-                    f"page {pid} free but referenced"
-            else:
-                assert self.pool.refs[pid] == want[pid], \
-                    f"page {pid}: refs {self.pool.refs[pid]} != {want[pid]}"
-        live = want[1:] > 0
-        assert int(live.sum()) == self.pool.used_pages, "leaked pages"
+                if want[pid] or self.pool.refs[pid]:
+                    raise PagerAuditError(
+                        f"page {pid} is on the free list but still "
+                        f"referenced (table/prefix refs {int(want[pid])}, "
+                        f"pool refs {int(self.pool.refs[pid])})",
+                        page=pid, expected=0,
+                        actual=int(self.pool.refs[pid]))
+            elif self.pool.refs[pid] != want[pid]:
+                kind = ("leaked" if self.pool.refs[pid] > want[pid]
+                        else "over-referenced")
+                raise PagerAuditError(
+                    f"page {pid} {kind}: pool refcount "
+                    f"{int(self.pool.refs[pid])} != {int(want[pid])} "
+                    f"references held by slot tables + prefix pins",
+                    page=pid, expected=int(want[pid]),
+                    actual=int(self.pool.refs[pid]))
+        live = int((want[1:] > 0).sum())
+        if live != self.pool.used_pages:
+            raise PagerAuditError(
+                f"pool accounting drift: {self.pool.used_pages} pages "
+                f"allocated but {live} referenced",
+                expected=live, actual=self.pool.used_pages)
 
     # ------------------------------------------------------------ ckpt
     def snapshot(self) -> dict:
         return {
             "table": self.table.copy(),
+            "geometry": {"page_size": self.pool.page_size,
+                         "num_pages": self.pool.num_pages,
+                         "pages_per_slot": self.pages_per_slot,
+                         "batch_slots": int(self.table.shape[0])},
             "pool": self.pool.snapshot(),
             "prefix": (self.prefix.snapshot()
                        if self.prefix is not None else None),
@@ -359,6 +411,20 @@ class Pager:
             raise ValueError(
                 f"pager snapshot table {table.shape} does not match engine "
                 f"geometry {self.table.shape}")
+        # geometry must match exactly: a table of page ids from a different
+        # (page_size, num_pages, pages_per_slot) world silently mis-indexes
+        # this pool (same-shape tables can still disagree on page_size)
+        want = {"page_size": self.pool.page_size,
+                "num_pages": self.pool.num_pages,
+                "pages_per_slot": self.pages_per_slot,
+                "batch_slots": int(self.table.shape[0])}
+        geom = snap.get("geometry", want)   # pre-geometry snapshots: shape
+        for key, val in want.items():       # + pool-size checks still apply
+            if geom.get(key, val) != val:
+                raise ValueError(
+                    f"pager snapshot {key}={geom[key]} does not match "
+                    f"engine {key}={val} — restoring would mis-index the "
+                    f"page pool")
         if len(snap["pool"]["refs"]) != self.pool.num_pages:
             raise ValueError(
                 f"pager snapshot has {len(snap['pool']['refs'])} pages, "

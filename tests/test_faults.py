@@ -1,0 +1,210 @@
+"""FaultPlan unit tests — trigger semantics, determinism, and serde.
+
+The plan is the contract the whole chaos stack leans on: counters are
+plan-owned and monotonic (rollback never rewinds them), firing is
+deterministic in (seed, call sequence), and plans round-trip through JSON
+and the compact CLI syntax byte-for-byte in behaviour.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.serve.faults import (FaultPlan, FaultSpec, QueueFull, SITES)
+
+
+# --------------------------------------------------------------------------
+# trigger semantics
+# --------------------------------------------------------------------------
+def test_at_fires_exactly_at_index():
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(3,))])
+    hits = [plan.fire("decode_logits") is not None for _ in range(6)]
+    assert hits == [False, False, False, True, False, False]
+
+
+def test_at_burst_covers_half_open_window():
+    plan = FaultPlan([FaultSpec(site="pager_fault_in", at=(2,), count=3)])
+    hits = [plan.fire("pager_fault_in") is not None for _ in range(7)]
+    assert hits == [False, False, True, True, True, False, False]
+
+
+def test_multiple_burst_starts():
+    plan = FaultPlan([FaultSpec(site="prefill", at=(1, 4), count=2)])
+    hits = [plan.fire("prefill") is not None for _ in range(7)]
+    assert hits == [False, True, True, False, True, True, False]
+
+
+def test_counters_are_per_site_and_monotonic():
+    """A site's counter advances on every call, hit or miss, and other
+    sites' counters are untouched."""
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(1,))])
+    plan.fire("prefill")
+    plan.fire("prefill")
+    assert plan.invocations["prefill"] == 2
+    assert plan.invocations["decode_logits"] == 0
+    assert plan.fire("decode_logits") is None       # idx 0
+    assert plan.fire("decode_logits") is not None   # idx 1
+    assert plan.invocations["decode_logits"] == 2
+
+
+def test_uid_targeted_fires_only_for_that_uid():
+    plan = FaultPlan([FaultSpec(site="prefill", uid=3, count=0)])
+    assert plan.fire("prefill", uid=1) is None
+    assert plan.fire("prefill", uid=3) is not None
+    assert plan.fire("prefill", uid=2) is None
+    assert plan.fire("prefill", uid=3) is not None  # count=0 → unlimited
+
+
+def test_uid_targeted_count_caps_total_firings():
+    plan = FaultPlan([FaultSpec(site="prefill", uid=7, count=2)])
+    fired = [plan.fire("prefill", uid=7) is not None for _ in range(5)]
+    assert fired == [True, True, False, False, False]
+
+
+def test_at_with_uid_requires_both():
+    plan = FaultPlan([FaultSpec(site="prefill", at=(1,), uid=5)])
+    assert plan.fire("prefill", uid=5) is None      # idx 0: wrong index
+    assert plan.fire("prefill", uid=4) is None      # idx 1: wrong uid
+    plan2 = FaultPlan([FaultSpec(site="prefill", at=(1,), uid=5)])
+    plan2.fire("prefill", uid=0)
+    assert plan2.fire("prefill", uid=5) is not None  # idx 1 + uid 5
+
+
+def test_prob_deterministic_in_seed():
+    def firing_pattern(seed):
+        plan = FaultPlan([FaultSpec(site="decode_logits", prob=0.5,
+                                    count=0)], seed=seed)
+        return [plan.fire("decode_logits") is not None for _ in range(64)]
+
+    a, b = firing_pattern(42), firing_pattern(42)
+    assert a == b, "same seed must reproduce the exact firing sequence"
+    assert any(a) and not all(a), "p=0.5 over 64 draws fires some, not all"
+    assert firing_pattern(43) != a, "different seed, different sequence"
+
+
+def test_prob_count_caps_total_firings():
+    plan = FaultPlan([FaultSpec(site="decode_logits", prob=1.0, count=3)])
+    fired = [plan.fire("decode_logits") is not None for _ in range(6)]
+    assert fired == [True, True, True, False, False, False]
+
+
+def test_first_matching_spec_wins_and_only_it_is_charged():
+    """Overlapping specs: the first match is returned, and only the spec
+    that actually fired consumes its firing budget."""
+    s1 = FaultSpec(site="decode_logits", at=(2,), payload=1.0)
+    s2 = FaultSpec(site="decode_logits", at=(2,), payload=2.0)
+    plan = FaultPlan([s1, s2])
+    for _ in range(2):
+        plan.fire("decode_logits")
+    hit = plan.fire("decode_logits")
+    assert hit is s1
+    assert plan._firings == [1, 0]
+
+
+def test_fired_log_and_rollup():
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(0,), count=2),
+                      FaultSpec(site="prefill", uid=1, count=1)])
+    plan.fire("decode_logits")
+    plan.fire("decode_logits")
+    plan.fire("prefill", uid=1)
+    assert plan.fired_by_site() == {"decode_logits": 2, "prefill": 1}
+    assert [f["index"] for f in plan.fired] == [0, 1, 0]
+    assert plan.fired[2]["uid"] == 1
+
+
+# --------------------------------------------------------------------------
+# validation
+# --------------------------------------------------------------------------
+def test_unknown_site_rejected():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec(site="warp_core_breach", at=(0,))
+
+
+def test_never_firing_spec_rejected():
+    with pytest.raises(ValueError, match="never fires"):
+        FaultSpec(site="decode_logits")
+
+
+@pytest.mark.parametrize("kw", [
+    {"at": (-1,)}, {"at": (0,), "count": 0}, {"prob": 1.5}, {"prob": -0.1},
+    {"count": -1, "uid": 0},
+])
+def test_bad_spec_fields_rejected(kw):
+    with pytest.raises(ValueError):
+        FaultSpec(site="decode_logits", **kw)
+
+
+def test_every_site_name_is_constructible():
+    for site in SITES:
+        FaultSpec(site=site, at=(0,))
+
+
+# --------------------------------------------------------------------------
+# serde: JSON + compact CLI syntax
+# --------------------------------------------------------------------------
+def test_json_roundtrip_preserves_behaviour():
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(3,), count=2),
+                      FaultSpec(site="prefill", uid=1, count=0),
+                      FaultSpec(site="decode_stall", prob=0.3, count=5,
+                                payload=0.25)], seed=7)
+    clone = FaultPlan.from_json(plan.to_json())
+    assert clone.seed == plan.seed
+    assert clone.specs == plan.specs
+    seq = [(s, u) for s in ("decode_logits", "prefill", "decode_stall")
+           for u in (0, 1, 2)] * 4
+    got = [clone.fire(s, uid=u) is not None for s, u in seq]
+    want = [plan.fire(s, uid=u) is not None for s, u in seq]
+    assert got == want, "round-tripped plan must fire identically"
+
+
+def test_from_json_rejects_bad_version_and_keys():
+    with pytest.raises(ValueError, match="version"):
+        FaultPlan.from_json('{"version": 2, "specs": []}')
+    with pytest.raises(ValueError, match="unknown fault-plan keys"):
+        FaultPlan.from_json('{"version": 1, "specs": [], "extra": 1}')
+    with pytest.raises(ValueError, match="unknown FaultSpec keys"):
+        FaultPlan.from_json(
+            '{"version": 1, "specs": [{"site": "prefill", "frobnicate": 1}]}')
+
+
+def test_parse_compact_syntax():
+    plan = FaultPlan.parse(
+        "decode_logits@5;pager_fault_in@7x6;prefill~3;sse_stall@0+0.5")
+    specs = {s.site: s for s in plan.specs}
+    assert specs["decode_logits"] == FaultSpec(site="decode_logits", at=(5,))
+    assert specs["pager_fault_in"] == FaultSpec(site="pager_fault_in",
+                                                at=(7,), count=6)
+    assert specs["prefill"] == FaultSpec(site="prefill", uid=3, count=0)
+    assert specs["sse_stall"] == FaultSpec(site="sse_stall", at=(0,),
+                                           payload=0.5)
+
+
+def test_parse_tolerates_whitespace_and_empty_entries():
+    plan = FaultPlan.parse(" decode_logits@1 ; ; prefill~0 ;")
+    assert len(plan.specs) == 2
+
+
+def test_load_dispatch(tmp_path):
+    """load() accepts a JSON file path, inline JSON, or compact syntax."""
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(2,))], seed=3)
+    p = tmp_path / "plan.json"
+    p.write_text(plan.to_json())
+    assert FaultPlan.load(str(p)).specs == plan.specs
+    assert FaultPlan.load(plan.to_json()).seed == 3
+    assert FaultPlan.load("decode_logits@2").specs == plan.specs
+
+
+def test_load_bad_json_file_raises(tmp_path):
+    """A real file with broken JSON falls through to the compact parser,
+    whose error names the junk — it must not be silently accepted."""
+    p = tmp_path / "plan.json"
+    p.write_text("{not json")
+    with pytest.raises(ValueError):
+        FaultPlan.load(str(p))
+
+
+# --------------------------------------------------------------------------
+# admission-control exception
+# --------------------------------------------------------------------------
+def test_queue_full_carries_retry_hint():
+    exc = QueueFull("full", retry_after_s=2.5)
+    assert exc.retry_after_s == 2.5

@@ -1,0 +1,276 @@
+"""Front-end robustness: load shedding, disconnect handling, drain-mode
+shutdown, and supervised streaming over real sockets.
+
+Tier-1 (fast) tests cover the engine-level admission bound and the
+constructor guards.  The slow-marked tests start a real asyncio server on
+an ephemeral port and check:
+
+  * a client that disconnects between admission and first token frees its
+    slot (``error="disconnected"``) instead of staying resident until
+    completion — the regression this PR fixes;
+  * a full bounded queue rejects new work with 503 + ``Retry-After``
+    (load shedding: resident work is never evicted);
+  * ``stop(drain_timeout_s=...)`` finishes in-flight requests while new
+    ones get 503, then closes;
+  * a supervised front-end streams bit-identical tokens across a
+    mid-stream rollback, and /healthz reflects the supervisor state.
+"""
+from __future__ import annotations
+
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.model_builder import build_model
+from repro.serve import (FaultPlan, FaultSpec, QueueFull, Request,
+                         ServeConfig, ServingEngine, Supervisor,
+                         SupervisorConfig)
+from repro.serve.frontend import HttpFrontend, fetch_json, sse_generate
+
+TINY = ModelConfig(
+    name="rob-tiny", family="dense", num_layers=1, d_model=16,
+    num_heads=2, num_kv_heads=2, head_dim=8, d_ff=32,
+    vocab_size=48, dtype="float32")
+
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _engine(model, params, **over):
+    cfg = dict(batch_slots=2, max_len=MAX_LEN)
+    cfg.update(over)
+    return ServingEngine(model, params, ServeConfig(**cfg))
+
+
+def _prompt(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, TINY.vocab_size, size=n).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# tier-1: admission control + constructor guards
+# --------------------------------------------------------------------------
+def test_bounded_queue_rejects_with_retry_hint(setup):
+    model, params = setup
+    eng = _engine(model, params, max_queued=2)
+    eng.submit(Request(0, _prompt()))
+    eng.submit(Request(1, _prompt()))
+    with pytest.raises(QueueFull) as ei:
+        eng.submit(Request(2, _prompt()))
+    assert ei.value.retry_after_s >= 1.0
+    assert [r.uid for r in eng.queue] == [0, 1], \
+        "rejected request must not join the queue"
+
+
+def test_force_submit_bypasses_admission_bound(setup):
+    """Supervisor replays re-enter through submit(force=True): rollback
+    recovery must never be load-shed."""
+    model, params = setup
+    eng = _engine(model, params, max_queued=1)
+    eng.submit(Request(0, _prompt()))
+    eng.submit(Request(1, _prompt()), force=True)
+    assert len(eng.queue) == 2
+
+
+def test_serve_config_rejects_negative_max_queued():
+    with pytest.raises(ValueError):
+        ServeConfig(max_queued=-1)
+
+
+def test_frontend_rejects_foreign_supervisor(setup):
+    model, params = setup
+    eng = _engine(model, params)
+    other = _engine(model, params)
+    sup = Supervisor(other)
+    with pytest.raises(ValueError, match="different engine"):
+        HttpFrontend(eng, supervisor=sup)
+
+
+def test_supervised_replay_not_load_shed(setup):
+    """End-to-end: a bounded queue + a fault mid-run — rollback replays
+    (force=True) still land, so every request completes."""
+    model, params = setup
+    eng = _engine(model, params, max_queued=8)
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(2,))])
+    sup = Supervisor(eng, SupervisorConfig(snapshot_every=2), faults=plan)
+    for uid in range(4):
+        sup.submit(Request(uid, _prompt(3, seed=uid), max_new=3))
+    done = sup.run()
+    assert len(done) == 4 and all(r.done and not r.error for r in done)
+    assert sup.stats["recoveries"] == 1
+
+
+# --------------------------------------------------------------------------
+# slow: real sockets
+# --------------------------------------------------------------------------
+async def _wait_for(cond, *, timeout=10.0, poll=0.01, msg=""):
+    loop = asyncio.get_running_loop()
+    t0 = loop.time()
+    while not cond():
+        assert loop.time() - t0 < timeout, f"timed out: {msg}"
+        await asyncio.sleep(poll)
+
+
+@pytest.mark.slow
+def test_disconnect_before_first_token_frees_slot(setup):
+    """A client that vanishes right after admission must not hold its slot
+    until max_new tokens are decoded into the void."""
+    model, params = setup
+
+    async def main():
+        fe = HttpFrontend(_engine(model, params))
+        await fe.start()
+        try:
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", fe.port)
+            import json as _json
+            body = _json.dumps({"prompt": [int(t) for t in _prompt()],
+                                "max_new": 40}).encode()
+            writer.write(
+                f"POST /generate HTTP/1.1\r\nHost: x\r\n"
+                f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+            await writer.drain()
+            await reader.readline()        # 200 OK → admission happened
+            writer.close()                 # vanish before reading tokens
+            await writer.wait_closed()
+            await _wait_for(
+                lambda: any(r.error == "disconnected"
+                            for r in fe.engine.finished),
+                msg="engine never cancelled the disconnected request")
+            await _wait_for(lambda: fe.engine.idle(),
+                            msg="slot still resident after disconnect")
+            (req,) = [r for r in fe.engine.finished
+                      if r.error == "disconnected"]
+            assert len(req.out) < 40, "must not decode to completion"
+        finally:
+            await fe.stop()
+
+    asyncio.run(main())
+
+
+@pytest.mark.slow
+def test_http_load_shedding_503_retry_after(setup):
+    """Slot busy + bounded queue full → the next request gets 503 with a
+    Retry-After hint; the resident and queued requests still finish."""
+    model, params = setup
+
+    async def main():
+        fe = HttpFrontend(_engine(model, params, batch_slots=1,
+                                  max_queued=1))
+        await fe.start()
+        try:
+            a = asyncio.ensure_future(sse_generate(
+                "127.0.0.1", fe.port, _prompt(), max_new=24))
+            await _wait_for(
+                lambda: sum(r is not None for r in fe.engine._slots) == 1,
+                msg="first request never became resident")
+            b = asyncio.ensure_future(sse_generate(
+                "127.0.0.1", fe.port, _prompt(seed=1), max_new=4))
+            await _wait_for(lambda: len(fe.engine.queue) == 1,
+                            msg="second request never queued")
+            shed_tokens, shed = await sse_generate(
+                "127.0.0.1", fe.port, _prompt(seed=2), max_new=4)
+            (a_tokens, a_final), (b_tokens, b_final) = await asyncio.gather(
+                a, b)
+        finally:
+            await fe.stop()
+        return shed_tokens, shed, a_tokens, a_final, b_tokens, b_final
+
+    shed_tokens, shed, a_tokens, a_final, b_tokens, b_final = \
+        asyncio.run(main())
+    assert shed == {"status": 503, "retry_after_s": shed["retry_after_s"]}
+    assert shed["retry_after_s"] >= 1.0 and shed_tokens == []
+    assert len(a_tokens) == 24 and not a_final["error"]
+    assert len(b_tokens) == 4 and not b_final["error"]
+
+
+@pytest.mark.slow
+def test_drain_shutdown_finishes_inflight_rejects_new(setup):
+    model, params = setup
+
+    async def main():
+        eng = _engine(model, params)
+        # pace the decode (30 ms/step) so the drain window is observable —
+        # the tiny model would otherwise finish before the 503 probe lands
+        eng.arm_faults(FaultPlan([FaultSpec(site="decode_stall", at=(0,),
+                                            count=1000, payload=0.03)]))
+        fe = HttpFrontend(eng)
+        await fe.start()
+        inflight = asyncio.ensure_future(sse_generate(
+            "127.0.0.1", fe.port, _prompt(), max_new=24))
+        await _wait_for(
+            lambda: sum(r is not None for r in fe.engine._slots) == 1,
+            msg="request never became resident")
+        stop = asyncio.ensure_future(fe.stop(drain_timeout_s=30.0))
+        await asyncio.sleep(0.05)          # let drain mode latch
+        health = await fetch_json("127.0.0.1", fe.port, "/healthz")
+        _, rejected = await sse_generate(
+            "127.0.0.1", fe.port, _prompt(seed=1), max_new=4)
+        tokens, final = await inflight
+        drained = await stop
+        return health, rejected, tokens, final, drained
+
+    health, rejected, tokens, final, drained = asyncio.run(main())
+    assert health["draining"] is True
+    assert rejected["status"] == 503 and rejected["retry_after_s"] >= 1.0
+    assert len(tokens) == 24 and final["done"] and not final["error"]
+    assert drained is True
+
+
+@pytest.mark.slow
+def test_supervised_stream_survives_rollback_bit_identical(setup):
+    """The full stack: SSE streaming through a supervisor that rolls the
+    engine back mid-stream (NaN logits) and stalls the egress once — every
+    client still receives exactly the oracle token sequence, and /healthz
+    speaks the supervisor's state machine."""
+    model, params = setup
+    specs = [{"prompt": _prompt(3 + i, seed=10 + i), "max_new": 4 + i}
+             for i in range(3)]
+
+    want = []
+    for s in specs:                        # offline batch=1 oracle
+        eng = _engine(model, params, batch_slots=1)
+        eng.submit(Request(0, s["prompt"], max_new=s["max_new"]))
+        (req,) = eng.run()
+        want.append(req.out)
+
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(4,)),
+                      FaultSpec(site="sse_stall", at=(1,), payload=0.05)])
+
+    async def main():
+        eng = _engine(model, params)
+        sup = Supervisor(eng, SupervisorConfig(snapshot_every=2),
+                         faults=plan)
+        fe = HttpFrontend(eng, supervisor=sup)
+        await fe.start()
+        try:
+            async def one(i, s):
+                await asyncio.sleep(0.02 * i)   # arrival order = uid order
+                return await sse_generate("127.0.0.1", fe.port, s["prompt"],
+                                          max_new=s["max_new"])
+            results = await asyncio.gather(
+                *(one(i, s) for i, s in enumerate(specs)))
+            health = await fetch_json("127.0.0.1", fe.port, "/healthz")
+            stats = await fetch_json("127.0.0.1", fe.port, "/stats")
+        finally:
+            await fe.stop()
+        return results, health, stats, sup
+
+    results, health, stats, sup = asyncio.run(main())
+    got = [tokens for tokens, _ in results]
+    assert got == want, "streamed tokens must survive the rollback bitwise"
+    assert all(final["done"] and not final["error"] for _, final in results)
+    assert sup.stats["recoveries"] >= 1
+    assert plan.fired_by_site().get("sse_stall") == 1
+    assert health["state"] in ("healthy", "degraded")
+    assert health["ok"] and health["draining"] is False
+    assert stats["supervisor"]["recoveries"] == sup.stats["recoveries"]

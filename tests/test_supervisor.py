@@ -1,0 +1,429 @@
+"""Supervised serving: crash recovery, retry budgets, and degradation.
+
+The recovery guarantee under test is **bitwise parity**: a supervised
+engine hit by a seeded FaultPlan (NaN logits, admission OOM, pager pool
+exhaustion, stalled steps) finishes the whole trace with per-uid greedy
+outputs identical to the batch=1 oracle — zero dropped requests, zero
+duplicated or skipped streamed tokens.  Degradation paths (quarantine,
+snapshot-write failure, EngineDown) are exercised separately.
+"""
+from __future__ import annotations
+
+import pickle
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.model_builder import build_model
+from repro.serve import (DeviceOom, EngineDown, FaultPlan, FaultSpec,
+                         PagerAuditError, Request, ServeConfig,
+                         ServingEngine, Supervisor, SupervisorConfig)
+from repro.serve.supervisor import DEGRADED, HEALTHY
+
+TINY = ModelConfig(
+    name="sup-tiny", family="dense", num_layers=1, d_model=16,
+    num_heads=2, num_kv_heads=2, head_dim=8, d_ff=32,
+    vocab_size=48, dtype="float32")
+
+MAX_LEN = 16
+SPECS = [(3, 4), (1, 3), (4, 2), (2, 2), (4, 5), (3, 3)]   # (prompt, max_new)
+
+_STATE: dict = {}
+
+
+def _model():
+    if not _STATE:
+        m = build_model(TINY)
+        _STATE["mp"] = (m, m.init(jax.random.PRNGKey(0)))
+    return _STATE["mp"]
+
+
+def _requests(specs=SPECS, seed=7, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid,
+                    rng.integers(0, TINY.vocab_size, size=S).astype(np.int32),
+                    max_new=mn, **kw)
+            for uid, (S, mn) in enumerate(specs)]
+
+
+def _oracle(specs=SPECS, seed=7):
+    """Fault-free batch=1 wave outputs — the bit-parity reference."""
+    key = ("oracle", tuple(specs), seed)
+    if key not in _STATE:
+        model, params = _model()
+        outs = {}
+        for r in _requests(specs, seed):
+            eng = ServingEngine(model, params,
+                                ServeConfig(batch_slots=1, max_len=MAX_LEN,
+                                            scheduler="wave"))
+            eng.submit(r)
+            (done,) = eng.run()
+            outs[done.uid] = tuple(done.out)
+        _STATE[key] = outs
+    return _STATE[key]
+
+
+def _engine(**kw):
+    model, params = _model()
+    cfg = dict(batch_slots=2, max_len=MAX_LEN)
+    cfg.update(kw)
+    return ServingEngine(model, params, ServeConfig(**cfg))
+
+
+def _supervised_run(plan, *, specs=SPECS, seed=7, engine_kw=None,
+                    sup_kw=None, on_token=None):
+    eng = _engine(**(engine_kw or {}))
+    sup = Supervisor(eng, SupervisorConfig(**(sup_kw or {})), faults=plan)
+    for r in _requests(specs, seed, on_token=on_token):
+        sup.submit(r)
+    done = sup.run()
+    return sup, {r.uid: tuple(r.out) for r in done}
+
+
+# --------------------------------------------------------------------------
+# the recovery guarantee: bitwise parity with the fault-free oracle
+# --------------------------------------------------------------------------
+def test_three_fault_types_recover_bit_identical():
+    """NaN logits mid-decode + admission OOM + a pager-pool burst that
+    defeats the engine's preempt-retry loop: the supervised paged engine
+    finishes the whole trace with outputs bitwise equal to the batch=1
+    oracle — no dropped requests, no divergent tokens."""
+    plan = FaultPlan([
+        FaultSpec(site="decode_logits", at=(3,)),
+        FaultSpec(site="prefill", at=(2,)),
+        FaultSpec(site="pager_fault_in", at=(9,), count=4),
+    ])
+    sup, outs = _supervised_run(
+        plan, engine_kw=dict(paged=True, page_size=4),
+        sup_kw=dict(snapshot_every=2, retry_budget=5))
+    assert outs == _oracle()
+    fired = plan.fired_by_site()
+    assert set(fired) == {"decode_logits", "prefill", "pager_fault_in"}
+    assert sup.stats["recoveries"] >= 3
+    assert sup.quarantined == []
+    assert sup.state == HEALTHY
+
+
+def test_decode_fault_alone_recovers():
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(2,), count=1)])
+    sup, outs = _supervised_run(plan, sup_kw=dict(snapshot_every=3))
+    assert outs == _oracle()
+    assert sup.stats["faults"] == {"NonFiniteLogits": 1}
+
+
+def test_prefill_oom_is_attributed_to_one_request():
+    """An admission OOM implicates only the request being prefilled, not
+    the whole resident batch."""
+    plan = FaultPlan([FaultSpec(site="prefill", at=(1,))])
+    sup, outs = _supervised_run(plan)
+    assert outs == _oracle()
+    assert sum(sup.retries.values()) == 1, \
+        "exactly one request should carry the blame"
+
+
+def test_unsupervised_nan_logits_corrupt_output():
+    """The motivation for the watchdog: the same NaN fault with no
+    supervisor is silently absorbed as garbage argmax tokens — outputs
+    diverge from the oracle instead of failing loudly."""
+    eng = _engine()
+    eng.arm_faults(FaultPlan([FaultSpec(site="decode_logits", at=(1,))]))
+    assert eng.watch_logits is False
+    for r in _requests():
+        eng.submit(r)
+    outs = {r.uid: tuple(r.out) for r in eng.run()}
+    assert outs != _oracle(), \
+        "NaN logits must corrupt the greedy stream when unsupervised"
+
+
+def test_streamed_tokens_exactly_once_across_rollback():
+    """on_token callbacks re-attached after a rollback deliver each token
+    exactly once (high-water mark): streams equal the oracle outputs with
+    no duplicates from the replayed steps."""
+    streamed: dict[int, list[int]] = {}
+
+    def on_token(req, tok):
+        streamed.setdefault(req.uid, []).append(int(tok))
+
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(2,)),
+                      FaultSpec(site="decode_logits", at=(6,))])
+    sup, outs = _supervised_run(plan, sup_kw=dict(snapshot_every=2),
+                                on_token=on_token)
+    assert outs == _oracle()
+    assert sup.stats["recoveries"] == 2
+    assert {u: tuple(t) for u, t in streamed.items()} == _oracle()
+
+
+# --------------------------------------------------------------------------
+# state machine + watchdogs
+# --------------------------------------------------------------------------
+def test_health_state_transitions():
+    """HEALTHY → (fault) → DEGRADED → (healthy_after clean pumps) →
+    HEALTHY, observable through pump-by-pump health()."""
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(1,))])
+    eng = _engine()
+    sup = Supervisor(eng, SupervisorConfig(healthy_after=2), faults=plan)
+    for r in _requests():
+        sup.submit(r)
+    states = []
+    while sup.pump():
+        states.append(sup.state)
+    assert DEGRADED in states
+    i = states.index(DEGRADED)
+    assert all(s == HEALTHY for s in states[:i - 1] or [HEALTHY])
+    assert states[i + 2] == HEALTHY, "recovers after 2 clean pumps"
+    assert sup.health()["ok"]
+
+
+def test_step_deadline_watchdog_recovers():
+    """A decode stall past the step deadline trips the watchdog; the run
+    still finishes bit-identical (the stalled step is rolled back and
+    replayed without the stall — its fault firing was consumed)."""
+    plan = FaultPlan([FaultSpec(site="decode_stall", at=(3,), payload=0.2)])
+    sup, outs = _supervised_run(
+        plan, sup_kw=dict(step_deadline_s=0.1, warmup_pumps=1,
+                          snapshot_every=2))
+    assert outs == _oracle()
+    assert sup.stats["faults"] == {"StepDeadlineExceeded": 1}
+
+
+def test_engine_down_after_consecutive_recovery_budget():
+    """A permanently faulting engine raises EngineDown instead of looping
+    forever (retry budget set high so quarantine can't drain the batch
+    first)."""
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(0,), count=1000)])
+    eng = _engine()
+    sup = Supervisor(eng, SupervisorConfig(
+        retry_budget=100, max_consecutive_recoveries=3), faults=plan)
+    for r in _requests():
+        sup.submit(r)
+    with pytest.raises(EngineDown, match="consecutive"):
+        sup.run()
+
+
+def test_backoff_accumulates_and_caps():
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(1,), count=3)])
+    eng = _engine()
+    sup = Supervisor(eng, SupervisorConfig(
+        retry_budget=100, backoff_base_s=0.01, backoff_cap_s=0.02),
+        faults=plan)
+    for r in _requests():
+        sup.submit(r)
+    sup.run()
+    # 0.01, 0.02 (capped from 0.02), 0.02 (capped from 0.04)
+    assert abs(sup.stats["backoff_s"] - 0.05) < 1e-9
+
+
+# --------------------------------------------------------------------------
+# quarantine
+# --------------------------------------------------------------------------
+def test_poison_request_quarantined_alone():
+    """A request whose admission faults every time (the poison shape) is
+    failed alone after retry_budget attempts; everyone else still matches
+    the oracle bit-for-bit."""
+    poison = 2
+    plan = FaultPlan([FaultSpec(site="prefill", uid=poison, count=0)])
+    sup, outs = _supervised_run(plan, sup_kw=dict(retry_budget=3))
+    oracle = _oracle()
+    assert sup.quarantined == [poison]
+    assert sup.retries[poison] == 3, "budget exactly spent, never exceeded"
+    assert outs[poison] == ()
+    assert {u: o for u, o in outs.items() if u != poison} \
+        == {u: o for u, o in oracle.items() if u != poison}
+    (poisoned,) = [r for r in sup.results() if r.uid == poison]
+    assert poisoned.error == "quarantined"
+
+
+def test_quarantine_never_exceeds_retry_budget():
+    plan = FaultPlan([FaultSpec(site="prefill", uid=0, count=0),
+                      FaultSpec(site="prefill", uid=3, count=0)])
+    sup, outs = _supervised_run(plan, sup_kw=dict(retry_budget=2))
+    assert sorted(sup.quarantined) == [0, 3]
+    assert all(v <= 2 for v in sup.retries.values())
+    assert len(outs) == len(SPECS), "quarantined uids still reported"
+
+
+# --------------------------------------------------------------------------
+# snapshotting
+# --------------------------------------------------------------------------
+def test_snapshot_write_failure_degrades_not_crashes():
+    """A failing snapshot persist keeps the previous rollback point and
+    degrades; the run still completes bit-identically, and a later fault
+    recovers from the last *good* snapshot."""
+    plan = FaultPlan([FaultSpec(site="snapshot_write", at=(1,)),
+                      FaultSpec(site="decode_logits", at=(5,))])
+    sup, outs = _supervised_run(plan, sup_kw=dict(snapshot_every=2))
+    assert outs == _oracle()
+    assert sup.stats["snapshot_write_failures"] == 1
+
+
+def test_genesis_snapshot_write_failure_survives_construction():
+    plan = FaultPlan([FaultSpec(site="snapshot_write", at=(0,))])
+    eng = _engine()
+    sup = Supervisor(eng, faults=plan)
+    assert sup.stats["snapshot_write_failures"] == 1
+    for r in _requests():
+        sup.submit(r)
+    assert {r.uid: tuple(r.out) for r in sup.run()} == _oracle()
+
+
+def test_snapshot_persists_to_disk_atomically(tmp_path):
+    sup_dir = tmp_path / "snaps"
+    eng = _engine()
+    sup = Supervisor(eng, SupervisorConfig(snapshot_every=2,
+                                           snapshot_dir=str(sup_dir)))
+    for r in _requests():
+        sup.submit(r)
+    sup.run()
+    assert sup.stats["snapshots"] >= 1
+    path = sup_dir / "snapshot.pkl"
+    assert path.exists() and not (sup_dir / "snapshot.pkl.tmp").exists()
+    snap = pickle.loads(path.read_bytes())
+    assert "device" in snap and "slots" in snap
+
+
+# --------------------------------------------------------------------------
+# pager audit + debug checks (satellite a)
+# --------------------------------------------------------------------------
+def test_pager_audit_runs_after_recovery(monkeypatch):
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(3,))])
+    eng = _engine(paged=True, page_size=4)
+    sup = Supervisor(eng, SupervisorConfig(snapshot_every=2), faults=plan)
+    calls = []
+    orig = eng.pager.check
+    monkeypatch.setattr(eng.pager, "check",
+                        lambda: (calls.append(1), orig())[1])
+    for r in _requests():
+        sup.submit(r)
+    outs = {r.uid: tuple(r.out) for r in sup.run()}
+    assert outs == _oracle()
+    assert len(calls) == sup.stats["recoveries"] == 1
+
+
+def test_corrupted_restore_surfaces_as_pager_audit_error():
+    """A rollback into an inconsistent pager state fails loudly with a
+    structured PagerAuditError naming the page, instead of silently
+    serving from a corrupted pool."""
+    plan = FaultPlan([FaultSpec(site="decode_logits", at=(5,))])
+    eng = _engine(paged=True, page_size=4)
+    sup = Supervisor(eng, SupervisorConfig(snapshot_every=100), faults=plan)
+    for r in _requests():
+        sup.submit(r)
+    for _ in range(4):
+        sup.pump()
+    sup.checkpoint()                      # mid-flight rollback point
+    # corrupt the rollback point: leak a refcount on a mapped page
+    pool = sup._snap["pager"]["pool"]
+    mapped = [p for p in np.asarray(sup._snap["pager"]["table"]).ravel()
+              if p > 0]
+    assert mapped, "snapshot must be mid-flight"
+    pool["refs"] = list(pool["refs"])
+    pool["refs"][int(mapped[0])] += 1
+    with pytest.raises(PagerAuditError) as ei:
+        sup.run()
+    assert ei.value.page == int(mapped[0])
+
+
+def test_debug_checks_audit_every_step():
+    """ServeConfig(debug_checks=True) runs the pager audit after every
+    scheduling quantum — the paged trace still matches the oracle."""
+    eng = _engine(paged=True, page_size=4, debug_checks=True)
+    for r in _requests():
+        eng.submit(r)
+    assert {r.uid: tuple(r.out) for r in eng.run()} == _oracle()
+
+
+# --------------------------------------------------------------------------
+# restore geometry validation (satellite c)
+# --------------------------------------------------------------------------
+def test_restore_rejects_page_size_mismatch():
+    """Same table shape, different page size (page 4 vs page 8 with 4
+    pages per slot both give a (2, 4) table) — a page id means a
+    different byte range in each world, so a direct pager restore must
+    be rejected up front on the geometry stamp, not just table shape."""
+    from repro.serve.pager import Pager
+
+    kw = dict(batch_slots=2, pages_per_slot=4, num_pages=9)
+    snap = Pager(page_size=4, **kw).snapshot()
+    with pytest.raises(ValueError, match="page_size"):
+        Pager(page_size=8, **kw).restore(snap)
+
+
+def test_engine_restore_rejects_cache_geometry_mismatch():
+    """At engine level the resident-cache stamp catches the same class of
+    mismatch (max_len 16/page 4 vs max_len 32/page 8)."""
+    eng = _engine(paged=True, page_size=4, max_len=16)
+    snap = eng.snapshot()
+    other = _engine(paged=True, page_size=8, max_len=32)
+    with pytest.raises(ValueError, match="max_len"):
+        other.restore(snap)
+
+
+def test_restore_rejects_num_pages_mismatch():
+    eng = _engine(paged=True, page_size=4, num_pages=9)
+    snap = eng.snapshot()
+    other = _engine(paged=True, page_size=4, num_pages=7)
+    with pytest.raises(ValueError, match="pages"):
+        other.restore(snap)
+
+
+def test_restore_rejects_batch_slots_mismatch():
+    eng = _engine(paged=True, page_size=4, batch_slots=2)
+    snap = eng.snapshot()
+    other = _engine(paged=True, page_size=4, batch_slots=3)
+    with pytest.raises(ValueError):
+        other.restore(snap)
+
+
+def test_restore_rejects_paged_into_contiguous():
+    eng = _engine(paged=True, page_size=4)
+    snap = eng.snapshot()
+    other = _engine()
+    with pytest.raises(ValueError):
+        other.restore(snap)
+
+
+def test_restore_accepts_matching_geometry():
+    eng = _engine(paged=True, page_size=4)
+    for r in _requests():
+        eng.submit(r)
+    for _ in range(3):
+        eng.pump()
+    snap = eng.snapshot()
+    other = _engine(paged=True, page_size=4)
+    other.restore(snap)
+    outs = {r.uid: tuple(r.out) for r in other.run()}
+    assert outs == _oracle()
+
+
+# --------------------------------------------------------------------------
+# config validation
+# --------------------------------------------------------------------------
+def test_supervisor_requires_continuous_scheduler():
+    eng = _engine(scheduler="wave")
+    with pytest.raises(ValueError, match="continuous"):
+        Supervisor(eng)
+
+
+@pytest.mark.parametrize("kw", [
+    {"snapshot_every": 0}, {"retry_budget": 0},
+    {"max_consecutive_recoveries": 0},
+])
+def test_supervisor_config_validation(kw):
+    with pytest.raises(ValueError):
+        SupervisorConfig(**kw)
+
+
+def test_prefill_fault_leaves_engine_state_clean():
+    """The prefill fault fires before any engine mutation: the faulted
+    request stays at the head of the queue and is admitted cleanly on
+    the post-recovery retry."""
+    eng = _engine()
+    eng.arm_faults(FaultPlan([FaultSpec(site="prefill", at=(0,))]))
+    eng.submit(_requests()[0])
+    with pytest.raises(DeviceOom):
+        eng.pump()
+    assert len(eng.queue) == 1 and all(r is None for r in eng._slots)
+    (done,) = eng.run()
+    assert tuple(done.out) == _oracle()[0]
