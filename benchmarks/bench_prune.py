@@ -37,7 +37,7 @@ except ModuleNotFoundError:                           # source checkout
 import jax
 
 from benchmarks.common import layer_problem, timeit
-from repro.core import PruneConfig, PrunePlan, prune_layer
+from repro.core import PruneConfig, PrunePlan, prune_layer, prune_layer_guarded
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -97,6 +97,38 @@ def run_grid(sizes, *, methods=METHODS, warmup: int = 1, iters: int = 3,
     return rows
 
 
+def guard_overhead(sizes, *, warmup: int = 1, iters: int = 3,
+                   max_ratio: float = 1.10) -> dict:
+    """Unarmed-guard cost on the headline cell: ``prune_layer_guarded``
+    with ``faults=None`` vs the bare solve.
+
+    The guard path adds one host-level finiteness reduction per solve and
+    an ``is not None`` per fault site — it must be free at benchmark
+    scale.  ``max_ratio`` is an assertion, not a report: a regression
+    that makes the supervised path tax the healthy path fails the bench
+    run outright.
+    """
+    c, b = max(sizes)
+    w, h = layer_problem(c, b)
+    cfg = PruneConfig(method="thanos", pattern="unstructured",
+                      p=0.5, block_size=128)
+    bare = timeit(lambda: prune_layer(w, h, cfg),
+                  warmup=warmup, iters=iters)
+    guarded = timeit(lambda: prune_layer_guarded(w, h, cfg)[0],
+                     warmup=warmup, iters=iters)
+    ratio = guarded / bare if bare > 0 else 1.0
+    out = {"cell": cell_key("thanos", "unstructured", c, b),
+           "bare_seconds": bare, "guarded_seconds": guarded,
+           "ratio": ratio, "max_ratio": max_ratio}
+    print(f"{'guard overhead (unarmed)':40s} {ratio:9.3f}x "
+          f"({bare * 1e3:.1f} -> {guarded * 1e3:.1f} ms)", flush=True)
+    if ratio > max_ratio:
+        raise SystemExit(
+            f"unarmed guard overhead {ratio:.3f}x exceeds {max_ratio}x "
+            "budget — prune_layer_guarded is taxing the healthy path")
+    return out
+
+
 def _git_rev() -> str:
     try:
         return subprocess.run(
@@ -135,6 +167,7 @@ def main() -> None:
     plan = PrunePlan.load(args.plan) if args.plan else None
     rows = run_grid(sizes, methods=methods, warmup=args.warmup,
                     iters=args.iters, plan=plan)
+    guard = guard_overhead(sizes, warmup=args.warmup, iters=args.iters)
 
     record = {
         "meta": {
@@ -150,6 +183,7 @@ def main() -> None:
             "protocol": "median wall s/call, warmed-up + block_until_ready",
         },
         "results": rows,
+        "guard_overhead": guard,
     }
 
     if args.baseline:

@@ -1,27 +1,35 @@
 """Core library: the paper's contribution (Thanos) + baselines + driver."""
 from repro.core.api import (
-    METHODS, PATTERNS, MethodSpec, PruneConfig, method_spec, prune_layer,
-    reconstruction_error, register_method, unregister_method,
+    METHODS, ON_SINGULAR, PATTERNS, GuardInfo, MethodSpec, PruneConfig,
+    method_spec, prune_layer, prune_layer_guarded, reconstruction_error,
+    register_method, unregister_method,
 )
-from repro.core.hessian import HessianAccumulator, dampen, inv_cholesky_upper
+from repro.core.hessian import (
+    DAMP_FLOOR, HessianAccumulator, dampen, factor_finite, h_finite,
+    inv_cholesky_upper,
+)
+from repro.core.jobs import LayerRecord, PruneJob, PruneJournal, batch_digest
 from repro.core.plan import (
     AllocationSpec, LayerStat, PrunePlan, PruneRule, as_plan, path_str,
 )
 from repro.core.schedule import (
-    PruneReport, collect_hessian_stats, get_path, prune_model, set_path,
+    LayerReport, PruneReport, collect_hessian_stats, get_path, prune_model,
+    set_path,
 )
 from repro.core.sparsity import NmCompressed, compression_ratio, pack_nm, unpack_nm
 from repro.core.thanos import PruneResult
 
 __all__ = [
-    "METHODS", "PATTERNS", "MethodSpec", "PruneConfig", "method_spec",
-    "prune_layer", "reconstruction_error", "register_method",
-    "unregister_method",
-    "HessianAccumulator", "dampen", "inv_cholesky_upper",
+    "METHODS", "ON_SINGULAR", "PATTERNS", "GuardInfo", "MethodSpec",
+    "PruneConfig", "method_spec", "prune_layer", "prune_layer_guarded",
+    "reconstruction_error", "register_method", "unregister_method",
+    "DAMP_FLOOR", "HessianAccumulator", "dampen", "factor_finite",
+    "h_finite", "inv_cholesky_upper",
+    "LayerRecord", "PruneJob", "PruneJournal", "batch_digest",
     "AllocationSpec", "LayerStat", "PrunePlan", "PruneRule", "as_plan",
     "path_str",
-    "PruneReport", "collect_hessian_stats", "get_path", "prune_model",
-    "set_path",
+    "LayerReport", "PruneReport", "collect_hessian_stats", "get_path",
+    "prune_model", "set_path",
     "NmCompressed", "compression_ratio", "pack_nm", "unpack_nm",
     "PruneResult",
 ]

@@ -194,6 +194,119 @@ def prune_layer(w: Array, h: Array | None, cfg: PruneConfig) -> PruneResult:
     return fn(w, h, cfg)
 
 
+# --------------------------------------------------------------------------
+# numerical guards: singular-Hessian policies + adaptive damping escalation
+# --------------------------------------------------------------------------
+ON_SINGULAR = ("fail", "escalate", "fallback:magnitude")
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardInfo:
+    """What ``prune_layer_guarded`` had to do to complete a layer.
+
+    ``damp_attempts`` counts *failed* solve attempts (0 = clean first
+    try); each escalation retried with percdamp ×10.  ``percdamp_used``
+    is the damping of the attempt that produced the returned result
+    (0.0 for a magnitude fallback, which does not consult H).
+    """
+
+    damp_attempts: int = 0
+    percdamp_used: float = 0.0
+    fallback: str = ""           # "magnitude" when the fallback fired
+    h_finite: bool = True
+
+
+def prune_layer_guarded(
+    w: Array,
+    h: Array | None,
+    cfg: PruneConfig,
+    *,
+    on_singular: str = "escalate",
+    max_escalations: int = 4,
+    solver: "Callable[[Array, Array | None, PruneConfig], PruneResult] | None" = None,
+    faults=None,
+    path: str = "",
+) -> tuple[PruneResult, GuardInfo]:
+    """``prune_layer`` with numerical guards: an ill-conditioned H must
+    surface as a policy decision, never as silent NaN weights.
+
+    A solve attempt *fails* when any output (weights, loss) is non-finite
+    — ``jnp.linalg.cholesky`` signals non-PD input with NaNs, which the
+    OBS update propagates.  Per ``on_singular``:
+
+      ``fail``                 raise :class:`SingularHessian` on the first
+                               failed attempt.
+      ``escalate``             retry with percdamp ×10 per attempt, up to
+                               ``max_escalations`` extra attempts (so the
+                               heaviest damping tried is
+                               ``percdamp·10^max_escalations``); raise if
+                               every attempt fails.
+      ``fallback:magnitude``   escalate as above, then complete the layer
+                               with data-free magnitude pruning (same
+                               sparsity pattern and target) instead of
+                               raising.
+
+    A non-finite H (Inf/NaN entries — a poisoned calibration stream that
+    defeated the accumulator guard) skips escalation entirely: damping
+    shifts the spectrum, it cannot repair entries.
+
+    ``solver`` swaps the per-attempt solve (default ``prune_layer``);
+    ``dist`` callers pass a ``prune_layer_sharded`` closure so escalation
+    and fallback run through the identical row-parallel path.  ``faults``
+    is an armed :class:`repro.faults.FaultPlan`: the ``cholesky`` site
+    fires once per attempt and, when armed, the attempt is treated as a
+    failed factorization (chaos tests drive every policy branch on a
+    perfectly healthy H).  Unarmed cost: one ``is not None`` per attempt
+    plus the finiteness reductions (see ``BENCH_prune.json``
+    ``guard_overhead``).
+    """
+    from repro.core.hessian import h_finite
+    from repro.core.solver import solution_finite
+    from repro.faults import SingularHessian
+
+    if on_singular not in ON_SINGULAR:
+        raise ValueError(f"unknown on_singular policy {on_singular!r}; "
+                         f"known: {ON_SINGULAR}")
+    if max_escalations < 0:
+        raise ValueError(f"max_escalations must be >= 0, "
+                         f"got {max_escalations}")
+    solve = solver if solver is not None else prune_layer
+
+    def magnitude_fallback(attempts: int, finite_h: bool):
+        mcfg = dataclasses.replace(cfg, method="magnitude")
+        res = solve(w, h, mcfg)
+        return res, GuardInfo(damp_attempts=attempts, percdamp_used=0.0,
+                              fallback="magnitude", h_finite=finite_h)
+
+    where = f" ({path})" if path else ""
+    if h is not None and not bool(h_finite(h)):
+        if on_singular == "fallback:magnitude":
+            return magnitude_fallback(0, False)
+        raise SingularHessian(
+            f"non-finite Hessian{where}: damping cannot repair Inf/NaN "
+            "entries (check the calibration stream / accumulator skip "
+            "counter)", path=path, attempts=0)
+
+    tries = 1 if on_singular == "fail" else 1 + max_escalations
+    for k in range(tries):
+        cfg_k = (cfg if k == 0 else
+                 dataclasses.replace(cfg, percdamp=cfg.percdamp * 10.0 ** k))
+        injected = faults is not None and faults.fire("cholesky") is not None
+        if not injected:
+            res = solve(w, h, cfg_k)
+            if solution_finite(res.weights, res.loss):
+                return res, GuardInfo(damp_attempts=k,
+                                      percdamp_used=cfg_k.percdamp)
+    if on_singular == "fallback:magnitude":
+        return magnitude_fallback(tries, True)
+    raise SingularHessian(
+        f"singular Hessian{where}: {tries} solve attempt(s) non-finite "
+        f"(percdamp escalated {cfg.percdamp} → "
+        f"{cfg.percdamp * 10.0 ** (tries - 1)}); "
+        "set on_singular='fallback:magnitude' to complete the layer "
+        "data-free", path=path, attempts=tries)
+
+
 def reconstruction_error(w0: Array, w1: Array, h: Array) -> Array:
     """‖(Ŵ−W)X‖²_F computed from the Hessian: tr(Δ (H/2) Δᵀ)  (Eq. 1)."""
     import jax.numpy as jnp

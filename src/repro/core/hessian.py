@@ -49,12 +49,20 @@ class HessianAccumulator:
 
     xtx: Array   # (b, b) fp32
     count: Array  # () fp32
+    skipped: Array = None  # type: ignore[assignment]  # () fp32 — see update
+
+    def __post_init__(self):
+        # pre-PR-8 callers construct (xtx, count) positionally; default the
+        # skip counter rather than breaking them
+        if self.skipped is None:
+            self.skipped = jnp.zeros((), dtype=jnp.float32)
 
     @staticmethod
     def init(b: int) -> "HessianAccumulator":
         return HessianAccumulator(
             xtx=jnp.zeros((b, b), dtype=jnp.float32),
             count=jnp.zeros((), dtype=jnp.float32),
+            skipped=jnp.zeros((), dtype=jnp.float32),
         )
 
     def update(self, x: Array) -> "HessianAccumulator":
@@ -64,20 +72,52 @@ class HessianAccumulator:
           x: token-major activations (..., b) — the LAST axis is always the
              feature axis.  (The paper writes X as (b, a) feature-major; we
              standardize on token-major and transpose at the boundary.)
+
+        A batch containing any NaN/Inf is **skipped whole** (its tokens
+        contribute nothing to ``xtx``/``count``; ``skipped`` increments):
+        one poisoned batch would otherwise turn the entire Hessian — and
+        every weight the OBS solve touches — non-finite.  Finite batches
+        are accumulated bitwise as before (the guard multiplies by an
+        all-ones mask), and the check is one fused reduction, jit-safe.
         """
         flat = x.reshape(-1, x.shape[-1]).astype(jnp.float32)   # (tokens, b)
+        ok = jnp.all(jnp.isfinite(flat))
+        flat = jnp.where(ok, flat, 0.0)
         xtx = flat.T @ flat
-        return HessianAccumulator(self.xtx + xtx, self.count + flat.shape[0])
+        return HessianAccumulator(
+            self.xtx + xtx,
+            self.count + jnp.where(ok, jnp.float32(flat.shape[0]), 0.0),
+            self.skipped + jnp.where(ok, 0.0, 1.0),
+        )
 
-    def finalize(self, *, mean: bool = True) -> Array:
-        """Return the Hessian ``H = 2·XXᵀ`` (optionally token-averaged)."""
+    def finalize(self, *, mean: bool = True, min_count: int = 0) -> Array:
+        """Return the Hessian ``H = 2·XXᵀ`` (optionally token-averaged).
+
+        ``min_count`` (host-level, not jit-safe) is the minimum-sample
+        guard: closing an accumulator that saw fewer than ``min_count``
+        calibration tokens — every batch skipped as non-finite, or a
+        misconfigured stream — raises ``InsufficientCalibration`` instead
+        of silently handing the solver a zero (→ identity-damped) Hessian
+        that would quietly degrade data-aware pruning to magnitude.
+        """
+        if min_count:
+            n, s = float(self.count), float(self.skipped)
+            if n < min_count:
+                from repro.faults import InsufficientCalibration
+
+                raise InsufficientCalibration(
+                    f"Hessian accumulator closed with {n:.0f} calibration "
+                    f"tokens < min_count={min_count} "
+                    f"({s:.0f} non-finite batch(es) skipped)")
         scale = jnp.where(self.count > 0, self.count, 1.0) if mean else 1.0
         return 2.0 * self.xtx / scale
 
     def psum(self, axis_name) -> "HessianAccumulator":
         """Cross-replica reduction for data-parallel calibration."""
         return HessianAccumulator(
-            jax.lax.psum(self.xtx, axis_name), jax.lax.psum(self.count, axis_name)
+            jax.lax.psum(self.xtx, axis_name),
+            jax.lax.psum(self.count, axis_name),
+            jax.lax.psum(self.skipped, axis_name),
         )
 
     @staticmethod
@@ -102,25 +142,37 @@ class HessianAccumulator:
 
     # pytree protocol -------------------------------------------------------
     def tree_flatten(self):
-        return (self.xtx, self.count), None
+        return (self.xtx, self.count, self.skipped), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
 
-def dampen(h: Array, percdamp: float = 0.01) -> Array:
+DAMP_FLOOR = 1e-8
+
+
+def dampen(h: Array, percdamp: float = 0.01,
+           floor: float = DAMP_FLOOR) -> Array:
     """Add λI with λ = percdamp · mean(diag H) (SparseGPT-style damping).
 
     Also revives dead features (zero diagonal) so the Cholesky never sees an
     exactly singular H — matching the reference implementations which set
     W[:, dead] = 0 and H[dead, dead] = 1.
+
+    ``floor`` is an **absolute** lower bound on λ: when a layer's
+    calibration activations are (near-)dead — diagonal mass so small that
+    ``percdamp · mean(diag H)`` underflows to exactly 0 in fp32 — the
+    relative damping adds nothing and a rank-deficient H stays singular.
+    The floor keeps λ strictly positive; for any healthy H it is orders
+    of magnitude below the relative term, so the damped matrix is bitwise
+    unchanged (``max(λ, floor) == λ``).
     """
     diag = jnp.diagonal(h)
     dead = diag <= 0.0
     h = h + jnp.diag(jnp.where(dead, 1.0, 0.0))
     diag = jnp.diagonal(h)
-    lam = percdamp * jnp.mean(diag)
+    lam = jnp.maximum(percdamp * jnp.mean(diag), floor)
     return h + lam * jnp.eye(h.shape[0], dtype=h.dtype)
 
 
@@ -144,6 +196,22 @@ def inv_cholesky_upper(h: Array) -> Array:
     linv = jax.scipy.linalg.solve_triangular(lh, eye, lower=True)
     hinv = linv.T @ linv                                     # H^{-1}
     return jnp.linalg.cholesky(hinv, upper=True)
+
+
+def h_finite(h: Array) -> Array:
+    """Jit-safe scalar: every entry of H is finite.  Damping cannot repair
+    Inf/NaN *entries* (λI shifts the spectrum, it does not replace values),
+    so a non-finite H short-circuits the escalation loop in
+    ``core.api.prune_layer_guarded`` straight to the ``on_singular``
+    policy."""
+    return jnp.all(jnp.isfinite(h))
+
+
+def factor_finite(u: Array) -> Array:
+    """Jit-safe scalar: the Cholesky factor is finite.  ``jnp.linalg``
+    signals a failed factorization with NaNs, not an exception — this is
+    the check that turns that silent poison into a detectable event."""
+    return jnp.all(jnp.isfinite(u))
 
 
 def trailing_inverse(u_hinv: Array, j: int) -> Array:

@@ -1,0 +1,294 @@
+"""Resilient prune jobs: crash-safe journaling and exact resume.
+
+A block-wise prune of a large model is a long sequential job — hours of
+per-layer OBS solves whose state (the calibration carries, the cross-block
+Hessian accumulators) lives only in process memory.  A preemption at layer
+k of n conventionally costs the whole run.  ``PruneJob`` makes the job
+restartable with **bitwise-identical** output:
+
+* Every completed layer is journaled to ``job_dir/layers/`` the moment it
+  is solved: the pruned kernel + mask (``NNNNN.npz``) first, then the
+  ``LayerReport`` fragment (``NNNNN.json``) — the *fragment* is the
+  completion marker, so a crash between the two leaves an orphan ``.npz``
+  that the resume simply overwrites.  All writes are atomic
+  (tmp + fsync + ``os.replace`` via ``repro.util.io``): no torn files,
+  ever.
+
+* ``job_dir/manifest.json`` pins everything the run depends on — the
+  recipe as passed, the **expanded** plan (sparsity allocation runs
+  exactly once, before the first journal write), the numerical-guard
+  policy, and a SHA-256 digest of the calibration batches.  Resume
+  validates all of it and refuses to continue a journal that belongs to
+  a different run.
+
+* Resume does **not** skip forward passes.  Pass-1 capture replays for
+  every block (forwards are deterministic and cheap relative to solves),
+  so cross-block state — weight-shared Hessian accumulators, the carries
+  entering later blocks — is bitwise that of an uninterrupted run; only
+  the expensive per-layer solves of already-journaled layers are replaced
+  by loads.  Hence the parity guarantee tested in tests/test_prune_jobs.py:
+  kill + resume ≡ one uninterrupted run, bit for bit.
+
+Kernels are stored as raw bytes + dtype string + shape because ``np.savez``
+cannot round-trip ml_dtypes arrays (bf16) natively; ``np.dtype("bfloat16")``
+resolves once JAX (which registers ml_dtypes) is imported.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import PruneConfig, PrunePlan, as_plan
+from repro.core.schedule import (LayerReport, PruneReport, collect_hessian_stats,
+                                 prune_model)
+from repro.faults import FaultPlan, JournalWriteError
+from repro.util.io import atomic_write_bytes, atomic_write_json
+
+Array = jax.Array
+
+JOURNAL_VERSION = 1
+_FRAGMENT_RE = re.compile(r"^(\d{5})\.json$")
+
+
+def _array_bytes(a) -> tuple[bytes, str, list[int]]:
+    a = np.asarray(a)
+    return a.tobytes(), str(a.dtype), list(a.shape)
+
+
+def _array_from(raw: bytes, dtype: str, shape) -> Array:
+    return jnp.asarray(np.frombuffer(raw, dtype=np.dtype(dtype))
+                       .reshape(tuple(shape)))
+
+
+def batch_digest(batches) -> str:
+    """SHA-256 over the calibration stream (leaf bytes + shapes/dtypes).
+    Identical batches ⇒ identical Hessians ⇒ resume parity; a changed
+    stream must be detected, not silently blended with journaled layers."""
+    h = hashlib.sha256()
+    for b in batches:
+        for leaf in jax.tree.leaves(b):
+            a = np.asarray(leaf)
+            h.update(str((a.shape, str(a.dtype))).encode())
+            h.update(a.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class LayerRecord:
+    """One journaled layer: the report fragment plus (for pruned layers)
+    the replacement kernel in storage layout (in, out) and its mask."""
+
+    report: LayerReport
+    kernel: Array | None = None
+    mask: Array | None = None
+
+
+class PruneJournal:
+    """Append-only per-layer journal under ``job_dir``.
+
+    ``completed`` is the length of the *contiguous* fragment prefix
+    ``00000.json .. NNNNN.json`` — a gap means everything after it is
+    unreachable state from a torn run and is ignored (and overwritten on
+    resume).  Stray ``*.tmp`` files from interrupted atomic writes are
+    ignored by construction (the fragment regex does not match them).
+    """
+
+    def __init__(self, job_dir: str):
+        self.job_dir = job_dir
+        self.layers_dir = os.path.join(job_dir, "layers")
+        os.makedirs(self.layers_dir, exist_ok=True)
+        self.completed = self._scan()
+
+    # ------------------------------------------------------------- layout
+    def _fragment(self, ordinal: int) -> str:
+        return os.path.join(self.layers_dir, f"{ordinal:05d}.json")
+
+    def _payload(self, ordinal: int) -> str:
+        return os.path.join(self.layers_dir, f"{ordinal:05d}.npz")
+
+    def _scan(self) -> int:
+        done = {int(m.group(1)) for name in os.listdir(self.layers_dir)
+                if (m := _FRAGMENT_RE.match(name))}
+        n = 0
+        while n in done:
+            n += 1
+        return n
+
+    # -------------------------------------------------------------- write
+    def write(self, ordinal: int, report: LayerReport, *,
+              kernel: Array | None = None, mask: Array | None = None,
+              faults: FaultPlan | None = None) -> None:
+        """Journal one completed layer.  Payload (.npz) lands before the
+        fragment (.json): the fragment's existence is the commit point.
+
+        The ``journal_write`` fault site fires *before anything is
+        written* — an injected failure leaves the journal exactly as it
+        was, which is what a real ENOSPC/preemption mid-write looks like
+        after the atomic replace discards the tmp file.
+        """
+        if faults is not None and faults.fire("journal_write") is not None:
+            raise JournalWriteError(
+                f"injected journal failure (layer {ordinal})",
+                site="journal_write")
+        frag: dict[str, Any] = {"version": JOURNAL_VERSION,
+                                "report": report.to_dict(),
+                                "has_payload": kernel is not None}
+        if kernel is not None:
+            kraw, kdt, kshape = _array_bytes(kernel)
+            arrs = {"kernel": np.frombuffer(kraw, np.uint8)}
+            frag["kernel_dtype"], frag["kernel_shape"] = kdt, kshape
+            if mask is not None:
+                mraw, mdt, mshape = _array_bytes(mask)
+                arrs["mask"] = np.frombuffer(mraw, np.uint8)
+                frag["mask_dtype"], frag["mask_shape"] = mdt, mshape
+            buf = io.BytesIO()
+            np.savez(buf, **arrs)
+            atomic_write_bytes(self._payload(ordinal), buf.getvalue())
+        atomic_write_json(self._fragment(ordinal), frag)
+        self.completed = max(self.completed, ordinal + 1)
+
+    # --------------------------------------------------------------- read
+    def load(self, ordinal: int) -> LayerRecord:
+        with open(self._fragment(ordinal)) as f:
+            frag = json.load(f)
+        if frag.get("version") != JOURNAL_VERSION:
+            raise ValueError(
+                f"journal fragment {ordinal} has version "
+                f"{frag.get('version')!r}, expected {JOURNAL_VERSION}")
+        report = LayerReport.from_dict(frag["report"])
+        kernel = mask = None
+        if frag.get("has_payload"):
+            with np.load(self._payload(ordinal)) as z:
+                kernel = _array_from(z["kernel"].tobytes(),
+                                     frag["kernel_dtype"],
+                                     frag["kernel_shape"])
+                if "mask" in z.files:
+                    mask = _array_from(z["mask"].tobytes(),
+                                       frag["mask_dtype"],
+                                       frag["mask_shape"])
+        return LayerRecord(report=report, kernel=kernel, mask=mask)
+
+
+class PruneJob:
+    """Supervised, journaled ``prune_model`` run rooted at ``job_dir``.
+
+    Fresh run: expands the plan's sparsity allocation (once), writes the
+    manifest, then drives ``prune_model`` with a journal.  ``resume=True``
+    validates the manifest against the caller's recipe + batches and
+    continues from the last completed layer; output is bitwise identical
+    to an uninterrupted run.  The final artifact is ``job_dir/report.json``
+    (atomic) — its presence marks the job finished, and resuming a
+    finished job replays entirely from the journal (a cheap no-op pass
+    that regenerates the same report).
+    """
+
+    MANIFEST = "manifest.json"
+    REPORT = "report.json"
+
+    def __init__(self, job_dir: str, *, on_singular: str = "escalate",
+                 max_escalations: int = 4, min_calib_samples: int = 1,
+                 faults: FaultPlan | None = None, mesh=None):
+        self.job_dir = job_dir
+        self.on_singular = on_singular
+        self.max_escalations = max_escalations
+        self.min_calib_samples = min_calib_samples
+        self.faults = faults
+        self.mesh = mesh
+
+    # ----------------------------------------------------------- manifest
+    def _manifest_path(self) -> str:
+        return os.path.join(self.job_dir, self.MANIFEST)
+
+    def report_path(self) -> str:
+        return os.path.join(self.job_dir, self.REPORT)
+
+    def _build_manifest(self, recipe: PrunePlan, plan: PrunePlan,
+                        digest: str, num_batches: int) -> dict:
+        return {
+            "version": JOURNAL_VERSION,
+            "recipe": recipe.to_dict(),
+            "plan": plan.to_dict(),
+            "on_singular": self.on_singular,
+            "max_escalations": self.max_escalations,
+            "min_calib_samples": self.min_calib_samples,
+            "num_batches": num_batches,
+            "batch_digest": digest,
+        }
+
+    # ---------------------------------------------------------------- run
+    def run(self, params, adapter, batches,
+            plan: "PrunePlan | PruneConfig", *, resume: bool = False,
+            keep_masks: bool = True, progress=None
+            ) -> tuple[Any, PruneReport]:
+        recipe = as_plan(plan)
+        batches = list(batches)
+        digest = batch_digest(batches)
+        manifest_path = self._manifest_path()
+
+        if resume:
+            if not os.path.exists(manifest_path):
+                raise FileNotFoundError(
+                    f"--resume: no manifest at {manifest_path} — nothing "
+                    "to resume (start without --resume to begin a job)")
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+            if manifest.get("version") != JOURNAL_VERSION:
+                raise ValueError(
+                    f"job manifest version {manifest.get('version')!r} != "
+                    f"{JOURNAL_VERSION}")
+            if manifest["recipe"] != recipe.to_dict():
+                raise ValueError(
+                    "--resume: plan does not match the journaled job "
+                    f"(manifest {manifest_path}); refusing to blend "
+                    "journaled layers from a different recipe")
+            if manifest["batch_digest"] != digest:
+                raise ValueError(
+                    "--resume: calibration batches differ from the "
+                    "journaled job (digest mismatch); resumed Hessians "
+                    "would not match journaled layers")
+            if manifest["on_singular"] != self.on_singular or \
+                    manifest["max_escalations"] != self.max_escalations or \
+                    manifest["min_calib_samples"] != self.min_calib_samples:
+                raise ValueError(
+                    "--resume: numerical-guard policy differs from the "
+                    "journaled job (on_singular/max_escalations/"
+                    "min_calib_samples must match the original run)")
+            # the manifest's *expanded* plan is authoritative: allocation
+            # ran exactly once, in the original run
+            run_plan = PrunePlan.from_dict(manifest["plan"])
+        else:
+            if os.path.exists(manifest_path):
+                raise FileExistsError(
+                    f"job dir {self.job_dir} already holds a job "
+                    f"({manifest_path} exists); pass resume=True to "
+                    "continue it or choose a fresh --job-dir")
+            # expand the allocation BEFORE the manifest lands so resume
+            # never re-runs it (determinism + one dense pass, not two)
+            run_plan = recipe
+            if run_plan.allocation is not None:
+                run_plan = run_plan.allocate_sparsity(
+                    collect_hessian_stats(params, adapter, batches))
+            os.makedirs(self.job_dir, exist_ok=True)
+            atomic_write_json(
+                manifest_path,
+                self._build_manifest(recipe, run_plan, digest, len(batches)))
+
+        journal = PruneJournal(self.job_dir)
+        pruned, report = prune_model(
+            params, adapter, batches, run_plan,
+            keep_masks=keep_masks, progress=progress,
+            journal=journal, faults=self.faults, mesh=self.mesh,
+            on_singular=self.on_singular,
+            max_escalations=self.max_escalations,
+            min_calib_samples=self.min_calib_samples)
+        report.save(self.report_path())
+        return pruned, report

@@ -35,7 +35,7 @@ import math
 import re
 from typing import Any, Iterable, Mapping
 
-from repro.core.api import PruneConfig
+from repro.core.api import ON_SINGULAR, PruneConfig
 
 ALLOCATION_POLICIES = ("uniform", "hessian_trace")
 _SCHEMA_VERSION = 1
@@ -62,16 +62,30 @@ class PruneRule:
     ``match`` is an fnmatch glob over the '/'-joined param path ('*'
     crosses '/'); with ``regex=True`` it is a ``re.fullmatch`` regex.
     ``cfg=None`` means *skip*: every path this rule claims stays dense.
+
+    ``on_singular`` is the rule's numerical-failure policy (``fail`` /
+    ``escalate`` / ``fallback:magnitude`` — see
+    ``core.api.prune_layer_guarded``); the empty default inherits the
+    run-level policy (``prune_model(..., on_singular=)``), so recipes
+    only pin it where a layer family needs special treatment (e.g.
+    ``fallback:magnitude`` on embeddings whose calibration stream is
+    known-sparse).
     """
 
     match: str
     cfg: PruneConfig | None = None
     regex: bool = False
     name: str = ""
+    on_singular: str = ""        # "" = inherit the run-level policy
 
     def __post_init__(self):
         if not self.match:
             raise ValueError("rule match pattern must be non-empty")
+        if self.on_singular and self.on_singular not in ON_SINGULAR:
+            raise ValueError(
+                f"rule {self.match!r}: unknown on_singular policy "
+                f"{self.on_singular!r}; known: {ON_SINGULAR} (or '' to "
+                "inherit)")
         if self.regex:
             try:
                 _compiled(self.match)
@@ -94,6 +108,8 @@ class PruneRule:
             d["regex"] = True
         if self.name:
             d["name"] = self.name
+        if self.on_singular:
+            d["on_singular"] = self.on_singular
         if self.cfg is None:
             d["action"] = "skip"
         else:
@@ -102,7 +118,7 @@ class PruneRule:
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "PruneRule":
-        known = {"match", "regex", "name", "action", "cfg"}
+        known = {"match", "regex", "name", "action", "cfg", "on_singular"}
         unknown = set(d) - known
         if unknown:
             raise ValueError(f"unknown rule keys {sorted(unknown)}; "
@@ -125,7 +141,8 @@ class PruneRule:
                 f"(got action={action!r})")
         return cls(match=d["match"], cfg=cfg,
                    regex=bool(d.get("regex", False)),
-                   name=str(d.get("name", "")))
+                   name=str(d.get("name", "")),
+                   on_singular=str(d.get("on_singular", "")))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,23 +255,26 @@ class PrunePlan:
             p_max=p_max if p_max is not None else spec.p_max,
         )
 
-        touched: list[tuple[str, PruneConfig, LayerStat]] = []
+        touched: list[tuple[str, PruneConfig, str, LayerStat]] = []
         for path, st in stats.items():
-            cfg = self.cfg_for(path)
+            idx, cfg = self.resolve(path)
             if cfg is not None and cfg.pattern in ("unstructured",
                                                    "structured"):
-                touched.append((path_str(path), cfg, st))
+                # the prepended exact-match rule shadows rules[idx] for
+                # this path — carry its on_singular policy along
+                touched.append((path_str(path), cfg,
+                                self.rules[idx].on_singular, st))
         if not touched:
             return PrunePlan(rules=self.rules, allocation=None)
 
         if spec.policy == "uniform":
-            target = {path: spec.budget for path, _, _ in touched}
+            target = {path: spec.budget for path, _, _, _ in touched}
         else:
             weights = {
                 path: 1.0 / (1.0 + math.log1p(max(st.trace, 0.0)))
-                for path, _, st in touched
+                for path, _, _, st in touched
             }
-            sizes = {path: max(st.size, 1) for path, _, st in touched}
+            sizes = {path: max(st.size, 1) for path, _, _, st in touched}
             total = sum(sizes.values())
 
             def mean_p(c: float) -> float:
@@ -273,13 +293,13 @@ class PrunePlan:
             c = 0.5 * (lo + hi)
             target = {
                 path: min(max(c * weights[path], spec.p_min), spec.p_max)
-                for path, _, _ in touched
+                for path, _, _, _ in touched
             }
 
         per_layer = tuple(
-            PruneRule(match=path, name="alloc",
+            PruneRule(match=path, name="alloc", on_singular=pol,
                       cfg=dataclasses.replace(cfg, p=target[path]))
-            for path, cfg, _ in touched
+            for path, cfg, pol, _ in touched
         )
         return PrunePlan(rules=per_layer + self.rules, allocation=None)
 

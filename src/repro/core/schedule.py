@@ -20,14 +20,16 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Any, Callable, Iterable, Protocol
+from typing import Any, Callable, Iterable, Mapping, Protocol
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.api import PruneConfig, prune_layer
+from repro.core.api import (PruneConfig, method_spec, prune_layer,  # noqa: F401
+                            prune_layer_guarded)
 from repro.core.hessian import HessianAccumulator
 from repro.core.plan import LayerStat, PrunePlan, as_plan, path_str
+from repro.faults import CalibrationError
 
 Array = jax.Array
 Path = tuple[Any, ...]
@@ -90,6 +92,29 @@ class LayerReport:
     tag: str = ""           # resolved PruneConfig.tag(), or "skip"
     params: int = 0         # kernel parameter count (rollup weighting)
     skipped: bool = False   # True = rule said dense / no rule matched
+    # numerical-guard provenance (core/api.prune_layer_guarded)
+    damp_attempts: int = 0  # failed solve attempts before success/fallback
+    percdamp_used: float = 0.0  # damping of the attempt that produced weights
+    fallback: str = ""      # "magnitude" when on_singular fell back data-free
+    calib_skipped: int = 0  # non-finite calibration batches the accumulator ate
+
+    # journal-fragment serde: path element types (str vs int expert index)
+    # survive exactly, unlike the display-oriented PruneReport.to_dict
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["path"] = list(self.path)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "LayerReport":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown LayerReport keys {sorted(unknown)}; "
+                             f"known: {sorted(known)}")
+        d = dict(d)
+        d["path"] = tuple(d["path"])
+        return cls(**d)
 
 
 @dataclasses.dataclass
@@ -152,11 +177,22 @@ class PruneReport:
                 "obs_loss": r.obs_loss,
                 "params": r.params,
                 "seconds": r.seconds,
+                "damp_attempts": r.damp_attempts,
+                "percdamp_used": r.percdamp_used,
+                "fallback": r.fallback,
+                "calib_skipped": r.calib_skipped,
             } for r in self.layers],
         }
 
     def to_json(self, *, indent: int | None = 1) -> str:
         return json.dumps(self.to_dict(), indent=indent)
+
+    def save(self, path: str) -> None:
+        """Crash-safe artifact write (tmp + ``os.replace``): a report file
+        on disk is always a complete, parseable JSON document."""
+        from repro.util.io import atomic_write_text
+
+        atomic_write_text(path, self.to_json() + "\n")
 
 
 def prune_model(
@@ -167,11 +203,37 @@ def prune_model(
     *,
     keep_masks: bool = True,
     progress: Callable[[str], None] | None = None,
+    journal=None,
+    faults=None,
+    mesh=None,
+    on_singular: str = "escalate",
+    max_escalations: int = 4,
+    min_calib_samples: int = 1,
 ) -> tuple[Any, PruneReport]:
     """Run Alg. 3 over the whole model.  Returns (pruned params, report).
 
     ``plan`` may be a ``PrunePlan`` (per-layer rules) or a bare
     ``PruneConfig`` (compat shim ≡ ``PrunePlan.uniform(cfg)``).
+
+    Robustness plumbing (PR 8 — all default-off except the guards):
+
+    * ``journal`` — a ``core.jobs.PruneJournal``: each completed layer is
+      persisted (pruned kernel + mask + ``LayerReport`` fragment, atomic
+      writes) as soon as it is solved, and layers already journaled are
+      *loaded* instead of re-solved — forward passes replay (cheap,
+      deterministic) so downstream Hessians and carries are bitwise those
+      of an uninterrupted run.  Use via ``core.jobs.PruneJob``.
+    * ``faults`` — an armed ``repro.faults.FaultPlan``; prune sites
+      ``calib_batch`` / ``hessian_accum`` / ``cholesky`` / ``journal_write``
+      fire here and in the guarded solve (zero cost unarmed).
+    * ``mesh`` — route every layer solve through
+      ``dist.prune.prune_layer_sharded`` on this mesh (escalation and
+      magnitude fallback included).
+    * ``on_singular`` — run-level numerical-failure policy; a rule's own
+      ``on_singular`` overrides it per layer.  ``max_escalations`` bounds
+      the percdamp ×10 retries.
+    * ``min_calib_samples`` — a data-aware layer whose accumulator closed
+      with fewer calibration tokens raises ``InsufficientCalibration``.
     """
     plan = as_plan(plan)
     t_start = time.perf_counter()
@@ -185,6 +247,13 @@ def prune_model(
         plan = plan.allocate_sparsity(
             collect_hessian_stats(params, adapter, batches))
     carries = [adapter.prepare(params, b) for b in batches]
+
+    solver = None
+    if mesh is not None:
+        from repro.dist.prune import prune_layer_sharded
+
+        def solver(w, h, cfg):  # noqa: F811 — row-parallel per-layer solve
+            return prune_layer_sharded(w, h, cfg, mesh)
 
     block_fwd = jax.jit(
         lambda p, c, i: adapter.block_apply(p, i, c, capture=False)[0],
@@ -203,20 +272,54 @@ def prune_model(
     # accumulated over every invocation — the correct treatment of weight
     # sharing under objective Eq. 1.  Entries are dropped once consumed.
     accs: dict[Path, HessianAccumulator] = {}
+    ordinal = 0                  # global sequential layer index (journal key)
 
     for i in range(adapter.num_blocks(params)):
         # ---- pass 1: capture inputs, accumulate Hessians -----------------
-        for carry in carries:
+        # Runs on resume too: journaled blocks replay their (deterministic)
+        # forwards so cross-block accumulators — weight-shared layers —
+        # and next-block carries are bitwise those of the original run.
+        for bi, carry in enumerate(carries):
+            if faults is not None and \
+                    faults.fire("calib_batch", uid=i) is not None:
+                raise CalibrationError(
+                    f"injected calibration failure (block {i}, batch {bi})",
+                    site="calib_batch")
             _, caps = block_cap(params, carry, i)
             for path, x in caps.items():
                 if path not in accs and plan.cfg_for(path) is None:
                     continue                 # skip rule: layer stays dense
                 if path not in accs:
                     accs[path] = HessianAccumulator.init(x.shape[-1])
+                if faults is not None and \
+                        faults.fire("hessian_accum") is not None:
+                    # poisoned activations: the accumulator's non-finite
+                    # guard must swallow the batch, not the Hessian
+                    x = jnp.full_like(x, jnp.nan)
                 accs[path] = accs[path].update(x)
 
         # ---- prune every linear in the block ------------------------------
         for path in adapter.block_linear_paths(params, i):
+            if journal is not None and ordinal < journal.completed:
+                rec = journal.load(ordinal)
+                if tuple(rec.report.path) != tuple(path):
+                    raise ValueError(
+                        f"journal layer {ordinal} is "
+                        f"{path_str(rec.report.path)!r}, expected "
+                        f"{path_str(path)!r} — job dir belongs to a "
+                        "different model/plan")
+                if not rec.report.skipped:
+                    params = set_path(params, path, rec.kernel)
+                    if keep_masks and rec.mask is not None:
+                        masks[path] = rec.mask
+                accs.pop(path, None)
+                reports.append(rec.report)
+                ordinal += 1
+                if progress:
+                    progress(f"block {i} {path_str(path)}: journaled "
+                             f"(layer {ordinal - 1})")
+                continue
+
             t0 = time.perf_counter()
             kernel = get_path(params, path)          # (in, out)
             rule_idx, cfg = plan.resolve(path)
@@ -227,17 +330,34 @@ def prune_model(
                     seconds=time.perf_counter() - t0, rule=rule_idx,
                     tag="skip", params=int(kernel.size), skipped=True,
                 )
+                if journal is not None:
+                    journal.write(ordinal, rep, faults=faults)
                 reports.append(rep)
+                ordinal += 1
                 if progress:
                     progress(f"block {i} {path_str(path)}: skipped "
                              f"(rule {rule_idx})")
                 continue
-            h = accs[path].finalize() if path in accs else None
-            res = prune_layer(kernel.T, h, cfg)      # paper layout (out, in)
+            acc = accs.get(path)
+            h = None
+            calib_skipped = 0
+            if acc is not None:
+                h = acc.finalize(
+                    min_count=(min_calib_samples
+                               if method_spec(cfg.method).data_aware else 0))
+                calib_skipped = int(float(acc.skipped))
+            pol = (plan.rules[rule_idx].on_singular
+                   if rule_idx >= 0 else "") or on_singular
+            res, guard = prune_layer_guarded(     # paper layout (out, in)
+                kernel.T, h, cfg, on_singular=pol,
+                max_escalations=max_escalations, solver=solver,
+                faults=faults, path=path_str(path))
             accs.pop(path, None)                     # free the Hessian
-            params = set_path(params, path, res.weights.T.astype(kernel.dtype))
+            new_kernel = res.weights.T.astype(kernel.dtype)
+            params = set_path(params, path, new_kernel)
+            mask_t = res.mask.T                      # (in, out), 1.0 = pruned
             if keep_masks:
-                masks[path] = res.mask.T             # (in, out), 1.0 = pruned
+                masks[path] = mask_t
             rep = LayerReport(
                 path=path,
                 sparsity=float(jnp.mean(res.mask)),
@@ -246,8 +366,16 @@ def prune_model(
                 rule=rule_idx,
                 tag=cfg.tag(),
                 params=int(kernel.size),
+                damp_attempts=guard.damp_attempts,
+                percdamp_used=guard.percdamp_used,
+                fallback=guard.fallback,
+                calib_skipped=calib_skipped,
             )
+            if journal is not None:
+                journal.write(ordinal, rep, kernel=new_kernel, mask=mask_t,
+                              faults=faults)
             reports.append(rep)
+            ordinal += 1
             if progress:
                 progress(f"block {i} {path_str(path)}: "
                          f"sparsity={rep.sparsity:.3f} loss={rep.obs_loss:.3e}")

@@ -101,10 +101,30 @@ def _tri_inv_lower(L: Array) -> Array:
 def _spd_solve(rhat: Array, u: Array) -> Array:
     """Batched SPD solve ``R̂' λ̂' = u'``: Cholesky + matmul-only inverse.
 
-    (c, r, r), (c, r) → (c, r); λ̂ = L⁻ᵀ(L⁻¹u)."""
+    (c, r, r), (c, r) → (c, r); λ̂ = L⁻ᵀ(L⁻¹u).
+
+    Numerical-failure contract: for an R̂ that is not numerically positive
+    definite (ill-conditioned trailing inverse from a singular H),
+    ``jnp.linalg.cholesky`` returns NaNs instead of raising, the NaN
+    multipliers poison the weight update, and the whole solve stays
+    jit/shard_map-traceable.  Detection is deliberately *post-hoc* and
+    host-level — ``solution_finite`` below, driven by
+    ``core.api.prune_layer_guarded`` — because a host check here would
+    break tracing inside ``dist.prune.prune_layer_sharded``.
+    """
     linv = _tri_inv_lower(jnp.linalg.cholesky(rhat))
     y = jnp.einsum("...rs,...s->...r", linv, u)
     return jnp.einsum("...sr,...s->...r", linv, y)
+
+
+def solution_finite(*arrays: Array) -> bool:
+    """Host-level finiteness check over solve outputs (weights, loss).
+
+    One fused reduction per array — O(c·b) reads against the solve's
+    O(b³) flops, measured in BENCH_prune.json's ``guard_overhead`` entry.
+    Forces a device sync, so call it once per *layer*, never per block.
+    """
+    return all(bool(jnp.all(jnp.isfinite(a))) for a in arrays)
 
 
 def batched_multipliers(

@@ -145,16 +145,19 @@ def hessian_all_reduce(acc, mesh: Mesh, axes: tuple[str, ...] = ("data",)):
     if not stacked:
         return acc                       # already a global (replicated) sum
     if n == 1:
-        return HessianAccumulator(acc.xtx.sum(0), acc.count.sum(0))
+        return HessianAccumulator(acc.xtx.sum(0), acc.count.sum(0),
+                                  acc.skipped.sum(0))
 
     rep = P(_entry(axes))
     fn = shard_map(
         lambda a: HessianAccumulator(
-            jax.lax.psum(a.xtx[0], axes), jax.lax.psum(a.count[0], axes)),
+            jax.lax.psum(a.xtx[0], axes), jax.lax.psum(a.count[0], axes),
+            jax.lax.psum(a.skipped[0], axes)),
         mesh=mesh,
         in_specs=(HessianAccumulator(
-            xtx=P(_entry(axes), None, None), count=rep),),
-        out_specs=HessianAccumulator(xtx=P(None, None), count=P()),
+            xtx=P(_entry(axes), None, None), count=rep, skipped=rep),),
+        out_specs=HessianAccumulator(xtx=P(None, None), count=P(),
+                                     skipped=P()),
         check_rep=False,
     )
     return fn(acc)

@@ -14,6 +14,12 @@ line; with none of those flags the run uses the bare-PruneConfig compat
 shim (≡ ``PrunePlan.uniform``).  ``--method``/``--pattern`` choices come
 straight from the ``core`` registry, so ``register_method`` extensions
 appear here automatically.
+
+Resilience (DESIGN.md §14): ``--job-dir DIR`` journals every completed
+layer so a killed run restarts with ``--resume`` and produces bitwise the
+same output; ``--on-singular`` picks the numerical-failure policy and
+``--fault-plan`` arms deterministic fault injection (prune sites:
+calib_batch, hessian_accum, cholesky, journal_write).
 """
 from __future__ import annotations
 
@@ -24,10 +30,11 @@ import jax
 
 from repro.configs import registry
 from repro.core import (
-    METHODS, PATTERNS, PruneConfig, PrunePlan, PruneRule, as_plan,
-    prune_model,
+    METHODS, ON_SINGULAR, PATTERNS, PruneConfig, PruneJob, PrunePlan,
+    PruneRule, as_plan, prune_model,
 )
 from repro.data.pipeline import calibration_batches, heldout_loss
+from repro.faults import FaultPlan
 from repro.models.model_builder import build_model, ModelAdapter
 
 # transformer-family shorthand globs ('*' crosses '/'); moe covers both the
@@ -39,7 +46,8 @@ ATTN_GLOBS = ("*/attn/*",)
 def prune_arch(
     arch: str, plan: "PrunePlan | PruneConfig", *, reduced: bool = True,
     num_samples: int = 16, seq_len: int = 128, batch: int = 8,
-    report_path: str = "", log=print,
+    report_path: str = "", log=print, job_dir: str = "",
+    resume: bool = False, on_singular: str = "escalate", faults=None,
 ):
     cfg = registry.get_config(arch, reduced=reduced)
     model = build_model(cfg)
@@ -50,10 +58,19 @@ def prune_arch(
         cfg, num_samples=num_samples, seq_len=seq_len, batch=batch
     )
     adapter = ModelAdapter(model)
-    # a recipe with an allocation block is expanded inside prune_model
-    # (one extra dense calibration pass); report.plan is the expanded plan
-    pruned, report = prune_model(params, adapter, batches, plan,
-                                 progress=None)
+    if job_dir:
+        # journaled supervision: layers persist as they complete, and a
+        # killed run restarts with resume=True bitwise where it left off
+        job = PruneJob(job_dir, on_singular=on_singular, faults=faults)
+        pruned, report = job.run(params, adapter, batches, plan,
+                                 resume=resume)
+    else:
+        # a recipe with an allocation block is expanded inside prune_model
+        # (one extra dense calibration pass); report.plan is the expanded
+        # plan
+        pruned, report = prune_model(params, adapter, batches, plan,
+                                     progress=None,
+                                     on_singular=on_singular, faults=faults)
     pruned_loss = heldout_loss(model, pruned, cfg)
     out = {
         "arch": arch,
@@ -68,10 +85,10 @@ def prune_arch(
         "layers_skipped": sum(1 for r in report.layers if r.skipped),
         "rules": report.rule_rollup(),
     }
+    if job_dir:
+        out["job_dir"] = job_dir
     if report_path:
-        with open(report_path, "w") as f:
-            f.write(report.to_json())
-            f.write("\n")
+        report.save(report_path)        # atomic: never a torn artifact
         out["report"] = report_path
     if log:
         log(json.dumps(out, indent=1))
@@ -138,11 +155,28 @@ def main():
                     help="write the PruneReport JSON (embeds the plan) here")
     ap.add_argument("--full", action="store_true",
                     help="full config (needs real accelerators)")
+    ap.add_argument("--job-dir", default="",
+                    help="journal completed layers here; a killed run "
+                         "restarts with --resume, bitwise identical")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue the journaled job in --job-dir")
+    ap.add_argument("--on-singular", default="escalate",
+                    choices=list(ON_SINGULAR),
+                    help="numerical-failure policy when a layer's Hessian "
+                         "resists factorization")
+    ap.add_argument("--fault-plan", default="",
+                    help="deterministic fault injection: JSON file or "
+                         "compact specs like 'journal_write@2;cholesky@0'")
     args = ap.parse_args()
 
+    if args.resume and not args.job_dir:
+        ap.error("--resume requires --job-dir")
+    faults = FaultPlan.load(args.fault_plan) if args.fault_plan else None
     plan = build_plan(args)
     prune_arch(args.arch, plan, reduced=not args.full,
-               report_path=args.report)
+               report_path=args.report, job_dir=args.job_dir,
+               resume=args.resume, on_singular=args.on_singular,
+               faults=faults)
 
 
 if __name__ == "__main__":

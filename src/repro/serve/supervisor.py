@@ -43,6 +43,7 @@ from repro.serve.engine import Request, ServingEngine
 from repro.serve.faults import (EngineDown, EngineFault, FaultPlan,
                                 SnapshotWriteError, StepDeadlineExceeded)
 from repro.serve.pager import PoolExhausted
+from repro.util.io import atomic_write_bytes
 
 HEALTHY = "healthy"
 DEGRADED = "degraded"
@@ -226,12 +227,9 @@ class Supervisor:
             raise SnapshotWriteError("injected snapshot write failure",
                                      site="snapshot_write")
         if self.cfg.snapshot_dir:
-            os.makedirs(self.cfg.snapshot_dir, exist_ok=True)
             path = os.path.join(self.cfg.snapshot_dir, "snapshot.pkl")
-            tmp = path + ".tmp"
-            with open(tmp, "wb") as f:
-                pickle.dump(snap, f)
-            os.replace(tmp, path)       # atomic: no torn snapshot on crash
+            # atomic (tmp + fsync + replace): no torn snapshot on crash
+            atomic_write_bytes(path, pickle.dumps(snap))
 
     # ------------------------------------------------------------- recovery
     def _note_fault(self, exc: Exception) -> None:

@@ -1,0 +1,6 @@
+"""Small shared utilities (crash-safe IO, …) with no repro-internal deps."""
+from repro.util.io import (
+    atomic_write_bytes, atomic_write_json, atomic_write_text,
+)
+
+__all__ = ["atomic_write_bytes", "atomic_write_json", "atomic_write_text"]

@@ -1,0 +1,48 @@
+"""Crash-safe file writes: tmp-in-same-dir + fsync + ``os.replace``.
+
+Every durable artifact in the repo — supervisor snapshots
+(serve/supervisor.py), prune-job journal records and manifests
+(core/jobs.py), and PruneReport JSON artifacts — goes through these
+helpers, so a crash (or an injected ``journal_write``/``snapshot_write``
+fault) can never leave a torn file behind: readers see either the old
+complete content or the new complete content, never a prefix.
+
+The temp file lives in the *target's* directory (``os.replace`` must not
+cross filesystems) and carries the pid so two writers racing on the same
+path cannot corrupt each other's temp; the loser's rename simply wins
+last, atomically.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+
+def atomic_write_bytes(path: str, data: bytes) -> None:
+    """Atomically replace ``path`` with ``data`` (creating parent dirs)."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        # a failed replace (or a crash between write and replace on a
+        # previous run) must not litter readers' directory scans
+        if os.path.exists(tmp):
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+
+def atomic_write_text(path: str, text: str) -> None:
+    atomic_write_bytes(path, text.encode("utf-8"))
+
+
+def atomic_write_json(path: str, obj: Any, *, indent: int | None = 1) -> None:
+    atomic_write_text(path, json.dumps(obj, indent=indent) + "\n")

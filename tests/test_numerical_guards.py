@@ -1,0 +1,354 @@
+"""Numerical guards: damping floor, adaptive escalation, on_singular
+policies, and the calibration-stream defenses on HessianAccumulator.
+
+The failure mode under test is silent: ``jnp.linalg.cholesky`` signals a
+non-PD Hessian with NaNs (no exception), and the OBS solve happily
+propagates them into every pruned weight.  The guards turn that into a
+policy decision — escalate damping, fall back data-free, or fail loudly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DAMP_FLOOR, GuardInfo, HessianAccumulator, ON_SINGULAR, PruneConfig,
+    PrunePlan, PruneRule, dampen, factor_finite, h_finite,
+    inv_cholesky_upper, prune_layer, prune_layer_guarded, prune_model,
+)
+from repro.core.solver import solution_finite
+from repro.faults import (CalibrationError, FaultPlan, InsufficientCalibration,
+                          SingularHessian)
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def _problem(out=8, b=16, seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(out, b)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(64, b)), jnp.float32)
+    h = HessianAccumulator.init(b).update(x).finalize()
+    return w, h
+
+
+# an indefinite 2x2 (eigenvalues 5 and -3): percdamp escalation reaches
+# positive-definiteness at ×10³ (λ = 10 > 3) but not before
+H_INDEFINITE = np.array([[1.0, 4.0], [4.0, 1.0]], np.float32)
+# indefinite with a -1e9 eigenvalue: unrecoverable within the ×10⁴ cap
+H_HOPELESS = np.array([[1.0, 1e9], [1e9, 1.0]], np.float32)
+
+
+# ==========================================================================
+# satellite (a): absolute damping floor
+# ==========================================================================
+class TestDampFloor:
+    # diag at the fp32 minimum normal: strictly positive (the dead-feature
+    # revive must NOT trigger), yet percdamp·mean(diag) lands subnormal and
+    # XLA CPU flushes it to exactly 0 — relative damping adds nothing
+    H_DEGENERATE = 1.2e-38
+
+    def test_subnormal_diag_underflows_relative_damping(self):
+        """The regression: diag so small that percdamp·mean(diag) flushes
+        to 0.0 in fp32 — relative damping adds nothing and the rank-1 H
+        stays singular; the factor chain goes non-finite."""
+        h = jnp.full((16, 16), self.H_DEGENERATE, jnp.float32)
+        assert float(jnp.min(jnp.diagonal(h))) > 0.0  # revive premise
+        lam = 0.01 * jnp.mean(jnp.diagonal(h))
+        assert float(lam) == 0.0                      # underflow premise
+        u = inv_cholesky_upper(dampen(h, floor=0.0))  # pre-floor behavior
+        assert not bool(factor_finite(u))
+
+    def test_floor_revives_degenerate_layer(self):
+        h = jnp.full((16, 16), self.H_DEGENERATE, jnp.float32)
+        u = inv_cholesky_upper(dampen(h))             # default floor
+        assert bool(factor_finite(u))
+        w, _ = _problem(b=16)
+        res, info = prune_layer_guarded(
+            w, h, PruneConfig(method="thanos", p=0.5, block_size=8))
+        assert solution_finite(res.weights, res.loss)
+        assert info == GuardInfo(damp_attempts=0, percdamp_used=0.01)
+
+    def test_floor_bitwise_noop_on_healthy_h(self):
+        _, h = _problem()
+        np.testing.assert_array_equal(np.asarray(dampen(h)),
+                                      np.asarray(dampen(h, floor=0.0)))
+        assert DAMP_FLOOR == 1e-8
+
+
+# ==========================================================================
+# escalation / policy matrix
+# ==========================================================================
+class TestGuardedSolve:
+    CFG = PruneConfig(method="thanos", p=0.5, block_size=2)
+
+    def test_healthy_h_bitwise_equals_unguarded(self):
+        w, h = _problem()
+        cfg = PruneConfig(method="thanos", p=0.5, block_size=8)
+        res, info = prune_layer_guarded(w, h, cfg)
+        ref = prune_layer(w, h, cfg)
+        np.testing.assert_array_equal(np.asarray(res.weights),
+                                      np.asarray(ref.weights))
+        np.testing.assert_array_equal(np.asarray(res.mask),
+                                      np.asarray(ref.mask))
+        assert info == GuardInfo(damp_attempts=0, percdamp_used=0.01)
+
+    def test_escalation_recovers_indefinite_h(self):
+        w = jnp.asarray(np.random.default_rng(0).normal(size=(4, 2)),
+                        jnp.float32)
+        res, info = prune_layer_guarded(w, jnp.asarray(H_INDEFINITE),
+                                        self.CFG)
+        assert solution_finite(res.weights, res.loss)
+        assert info.damp_attempts == 3                # λ: .01, .1, 1 fail
+        assert info.percdamp_used == pytest.approx(0.01 * 10 ** 3)
+        assert info.fallback == ""
+
+    def test_fail_policy_raises_first_attempt(self):
+        w = jnp.ones((4, 2), jnp.float32)
+        with pytest.raises(SingularHessian) as ei:
+            prune_layer_guarded(w, jnp.asarray(H_INDEFINITE), self.CFG,
+                                on_singular="fail", path="blocks/0/fc1/w")
+        assert ei.value.attempts == 1
+        assert "blocks/0/fc1/w" in str(ei.value)
+
+    def test_escalate_exhausted_raises(self):
+        w = jnp.ones((4, 2), jnp.float32)
+        with pytest.raises(SingularHessian) as ei:
+            prune_layer_guarded(w, jnp.asarray(H_HOPELESS), self.CFG,
+                                max_escalations=2)
+        assert ei.value.attempts == 3
+
+    def test_fallback_magnitude_completes_data_free(self):
+        w = jnp.asarray(np.random.default_rng(1).normal(size=(4, 2)),
+                        jnp.float32)
+        res, info = prune_layer_guarded(
+            w, jnp.asarray(H_HOPELESS), self.CFG,
+            on_singular="fallback:magnitude", max_escalations=2)
+        ref = prune_layer(
+            w, jnp.asarray(H_HOPELESS),
+            dataclasses.replace(self.CFG, method="magnitude"))
+        np.testing.assert_array_equal(np.asarray(res.weights),
+                                      np.asarray(ref.weights))
+        assert info.fallback == "magnitude"
+        assert info.damp_attempts == 3
+        assert info.percdamp_used == 0.0              # H never consulted
+
+    def test_nonfinite_h_skips_escalation(self):
+        """Damping shifts the spectrum; it cannot repair NaN entries —
+        the guard must go straight to the policy, not burn retries."""
+        w, h = _problem()
+        h = h.at[0, 0].set(jnp.nan)
+        assert not bool(h_finite(h))
+        with pytest.raises(SingularHessian) as ei:
+            prune_layer_guarded(w, h,
+                                PruneConfig(method="thanos", p=0.5,
+                                            block_size=8))
+        assert ei.value.attempts == 0
+        res, info = prune_layer_guarded(
+            w, h, PruneConfig(method="thanos", p=0.5, block_size=8),
+            on_singular="fallback:magnitude")
+        assert info.fallback == "magnitude" and not info.h_finite
+        assert solution_finite(res.weights, res.loss)
+
+    def test_injected_cholesky_faults_on_healthy_h(self):
+        """Chaos path: armed ``cholesky`` site fails attempts on a
+        perfectly healthy H; escalation absorbs exactly the burst."""
+        w, h = _problem()
+        cfg = PruneConfig(method="thanos", p=0.5, block_size=8)
+        faults = FaultPlan.parse("cholesky@0x2")      # kill attempts 0, 1
+        res, info = prune_layer_guarded(w, h, cfg, faults=faults)
+        assert info.damp_attempts == 2
+        assert solution_finite(res.weights, res.loss)
+        # fail policy + armed first attempt → loud failure
+        with pytest.raises(SingularHessian):
+            prune_layer_guarded(w, h, cfg, on_singular="fail",
+                                faults=FaultPlan.parse("cholesky@0"))
+
+    def test_policy_validation(self):
+        w, h = _problem()
+        cfg = PruneConfig(method="thanos", p=0.5, block_size=8)
+        with pytest.raises(ValueError, match="on_singular"):
+            prune_layer_guarded(w, h, cfg, on_singular="retry")
+        with pytest.raises(ValueError, match="max_escalations"):
+            prune_layer_guarded(w, h, cfg, max_escalations=-1)
+        assert ON_SINGULAR == ("fail", "escalate", "fallback:magnitude")
+
+
+# ==========================================================================
+# HessianAccumulator calibration defenses
+# ==========================================================================
+class TestAccumulatorGuards:
+    def test_nonfinite_batch_skipped_whole_bitwise(self):
+        rng = np.random.default_rng(2)
+        good = [jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+                for _ in range(3)]
+        bad = good[1].at[5, 3].set(jnp.inf)
+
+        clean = HessianAccumulator.init(8)
+        for x in good:
+            clean = clean.update(x)
+        poisoned = HessianAccumulator.init(8)
+        for x in (good[0], bad, good[2]):
+            poisoned = poisoned.update(x)
+
+        # the poisoned batch contributes nothing; the finite batches
+        # accumulate bitwise as they would alone
+        ref = HessianAccumulator.init(8).update(good[0]).update(good[2])
+        np.testing.assert_array_equal(np.asarray(poisoned.xtx),
+                                      np.asarray(ref.xtx))
+        assert float(poisoned.count) == float(ref.count)
+        assert float(poisoned.skipped) == 1.0
+        assert float(clean.skipped) == 0.0
+        assert bool(h_finite(poisoned.finalize()))
+
+    def test_finite_batches_bitwise_unchanged_by_guard(self):
+        """The guard multiplies by an all-ones mask for finite input —
+        xtx must be bitwise what unguarded accumulation produced."""
+        x = jnp.asarray(np.random.default_rng(3).normal(size=(32, 8)),
+                        jnp.float32)
+        acc = HessianAccumulator.init(8).update(x)
+        flat = x.astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(acc.xtx),
+                                      np.asarray(flat.T @ flat))
+
+    def test_min_count_guard(self):
+        acc = HessianAccumulator.init(8)
+        acc = acc.update(jnp.full((16, 8), jnp.nan))  # every batch skipped
+        with pytest.raises(InsufficientCalibration, match="0 calibration"):
+            acc.finalize(min_count=1)
+        acc = acc.update(jnp.ones((16, 8)))
+        assert bool(h_finite(acc.finalize(min_count=16)))
+
+    def test_combine_and_stack_carry_skipped(self):
+        a = HessianAccumulator.init(4).update(jnp.full((8, 4), jnp.nan))
+        b = HessianAccumulator.init(4).update(jnp.ones((8, 4)))
+        merged = HessianAccumulator.combine(a, b)
+        assert float(merged.skipped) == 1.0
+        assert float(merged.count) == 8.0
+        stacked = jax.tree.map(lambda x: x[None], merged)
+        assert stacked.skipped.shape == (1,)          # 3-leaf pytree
+
+
+# ==========================================================================
+# per-rule on_singular plumbing
+# ==========================================================================
+class TestRulePolicy:
+    def test_rule_serde_round_trip(self):
+        rule = PruneRule(match="*/attn/*",
+                         cfg=PruneConfig(method="thanos", p=0.5),
+                         on_singular="fallback:magnitude")
+        d = rule.to_dict()
+        assert d["on_singular"] == "fallback:magnitude"
+        assert PruneRule.from_dict(d) == rule
+        # inherit-marker "" stays out of the serialized form
+        assert "on_singular" not in PruneRule(match="*").to_dict()
+
+    def test_rule_rejects_unknown_policy(self):
+        with pytest.raises(ValueError, match="on_singular"):
+            PruneRule(match="*", on_singular="shrug")
+
+    def test_plan_round_trip_preserves_policy(self):
+        plan = PrunePlan(rules=(
+            PruneRule(match="*/fc1/*",
+                      cfg=PruneConfig(method="thanos", p=0.5),
+                      on_singular="fail"),
+            PruneRule(match="*", cfg=PruneConfig(method="magnitude", p=0.5)),
+        ))
+        back = PrunePlan.from_dict(plan.to_dict())
+        assert back.rules[0].on_singular == "fail"
+        assert back.rules[1].on_singular == ""
+
+
+# ==========================================================================
+# prune_model integration
+# ==========================================================================
+class _TinyAdapter:
+    NAMES = ("fc1", "fc2")
+
+    def num_blocks(self, params):
+        return len(params["blocks"])
+
+    def prepare(self, params, batch):
+        return batch
+
+    def block_apply(self, params, i, carry, *, capture):
+        caps = {}
+        x = carry
+        for name in self.NAMES:
+            if capture:
+                caps[("blocks", i, name, "w")] = x
+            x = jnp.tanh(x @ params["blocks"][i][name]["w"])
+        return x, caps
+
+    def block_linear_paths(self, params, i):
+        return [("blocks", i, name, "w") for name in self.NAMES]
+
+
+def _tiny_problem(d=16, nblocks=2, nbatches=2, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"blocks": {
+        i: {n: {"w": jnp.asarray(rng.normal(size=(d, d)) / np.sqrt(d),
+                                 jnp.float32)}
+            for n in _TinyAdapter.NAMES}
+        for i in range(nblocks)
+    }}
+    batches = [jnp.asarray(rng.normal(size=(8, d)), jnp.float32)
+               for _ in range(nbatches)]
+    return params, _TinyAdapter(), batches
+
+
+class TestPruneModelIntegration:
+    CFG = PruneConfig(method="thanos", p=0.5, block_size=8)
+
+    def test_injected_cholesky_fault_recorded_in_report(self):
+        params, adapter, batches = _tiny_problem()
+        _, report = prune_model(params, adapter, batches, self.CFG,
+                                faults=FaultPlan.parse("cholesky@0"))
+        assert report.layers[0].damp_attempts == 1
+        assert report.layers[0].percdamp_used == pytest.approx(0.1)
+        assert all(r.damp_attempts == 0 for r in report.layers[1:])
+        art = report.to_dict()["layers"][0]
+        assert art["damp_attempts"] == 1 and art["fallback"] == ""
+
+    def test_injected_calibration_fault_raises(self):
+        params, adapter, batches = _tiny_problem()
+        with pytest.raises(CalibrationError):
+            prune_model(params, adapter, batches, self.CFG,
+                        faults=FaultPlan.parse("calib_batch@1"))
+
+    def test_poisoned_batch_counted_not_fatal(self):
+        """Armed hessian_accum turns one capture NaN; the accumulator
+        swallows it and the layer still prunes from the healthy batch."""
+        params, adapter, batches = _tiny_problem()
+        pruned, report = prune_model(params, adapter, batches, self.CFG,
+                                     faults=FaultPlan.parse("hessian_accum@0"))
+        assert report.layers[0].calib_skipped == 1
+        assert all(bool(jnp.isfinite(leaf).all())
+                   for leaf in jax.tree.leaves(pruned))
+
+    def test_all_batches_poisoned_is_insufficient(self):
+        params, adapter, batches = _tiny_problem()
+        n = len(batches) * len(batches)   # every (block, batch) capture
+        with pytest.raises(InsufficientCalibration):
+            prune_model(params, adapter, batches, self.CFG,
+                        faults=FaultPlan.parse(f"hessian_accum@0x{n * 2}"))
+
+    def test_per_rule_policy_overrides_run_level(self):
+        params, adapter, batches = _tiny_problem()
+        plan = PrunePlan(rules=(
+            PruneRule(match="*/fc1/*", cfg=self.CFG,
+                      on_singular="fallback:magnitude"),
+            PruneRule(match="*", cfg=self.CFG),
+        ))
+        # the burst sinks exactly the first layer's 3 attempts (fc1 of
+        # block 0, fallback policy 1 + max_escalations=2 tries); its
+        # rule's fallback completes the layer even though the run-level
+        # policy is "fail", and untouched layers solve cleanly
+        faults = FaultPlan.parse("cholesky@0x3")
+        _, report = prune_model(params, adapter, batches, plan,
+                                faults=faults, on_singular="fail",
+                                max_escalations=2)
+        fc1 = next(r for r in report.layers if r.path[2] == "fc1")
+        assert fc1.fallback == "magnitude" and fc1.damp_attempts == 3
+        assert all(r.fallback == "" for r in report.layers[1:])

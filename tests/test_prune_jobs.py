@@ -1,0 +1,311 @@
+"""PruneJob / PruneJournal: crash-safe journaling and bitwise resume.
+
+The property under test is the recovery guarantee of DESIGN.md §14: a
+prune job killed at ANY layer boundary and resumed produces params,
+masks, and per-layer reports **bitwise identical** to one uninterrupted
+run — across sparsity patterns (dense float masks and n:m cells) and
+across the local / sharded solve paths.  Kills are injected
+deterministically through the shared fault core (``journal_write`` /
+``calib_batch`` sites), so every boundary is reachable on demand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (
+    LayerReport, PruneConfig, PruneJob, PruneJournal, PrunePlan, PruneRule,
+    batch_digest, prune_model,
+)
+from repro.faults import CalibrationError, FaultPlan, JournalWriteError
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def mesh_1x1() -> Mesh:
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+# ==========================================================================
+# fixture: 2 blocks × (fc1, fc2) tanh MLP — 4 journaled layers
+# ==========================================================================
+class TinyAdapter:
+    NAMES = ("fc1", "fc2")
+
+    def num_blocks(self, params):
+        return len(params["blocks"])
+
+    def prepare(self, params, batch):
+        return batch
+
+    def block_apply(self, params, i, carry, *, capture):
+        caps = {}
+        x = carry
+        for name in self.NAMES:
+            if capture:
+                caps[("blocks", i, name, "w")] = x
+            x = jnp.tanh(x @ params["blocks"][i][name]["w"])
+        return x, caps
+
+    def block_linear_paths(self, params, i):
+        return [("blocks", i, name, "w") for name in self.NAMES]
+
+
+@pytest.fixture(scope="module")
+def problem():
+    d, nblocks = 16, 2
+    rng = np.random.default_rng(7)
+    params = {"blocks": {
+        i: {n: {"w": jnp.asarray(rng.normal(size=(d, d)) / np.sqrt(d),
+                                 jnp.float32)}
+            for n in TinyAdapter.NAMES}
+        for i in range(nblocks)
+    }}
+    batches = [jnp.asarray(rng.normal(size=(8, d)), jnp.float32)
+               for _ in range(2)]
+    return params, TinyAdapter(), batches
+
+
+CELLS = {
+    "unstructured": PruneConfig(method="thanos", pattern="unstructured",
+                                p=0.5, block_size=8),
+    "nm": PruneConfig(method="thanos", pattern="nm", n=2, m=4, block_size=8),
+}
+
+
+def _assert_trees_equal(a, b):
+    for (kp, x), (_, y) in zip(jax.tree_util.tree_leaves_with_path(a),
+                               jax.tree_util.tree_leaves_with_path(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(kp))
+
+
+def _assert_reports_equal(a, b):
+    """Layer-report parity modulo wall-clock (``seconds`` is the one field
+    that legitimately differs between a resumed and an oracle run)."""
+    assert len(a.layers) == len(b.layers)
+    for ra, rb in zip(a.layers, b.layers):
+        assert dataclasses.replace(ra, seconds=0.0) == \
+            dataclasses.replace(rb, seconds=0.0)
+    assert set(a.masks) == set(b.masks)
+    for path in a.masks:
+        np.testing.assert_array_equal(np.asarray(a.masks[path]),
+                                      np.asarray(b.masks[path]))
+
+
+# ==========================================================================
+# journal mechanics
+# ==========================================================================
+class TestJournal:
+    def test_round_trip_bf16_kernel(self, tmp_path):
+        j = PruneJournal(str(tmp_path))
+        k = (jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4)) * 0.1
+        m = jnp.asarray(np.eye(3, 4), jnp.float32)
+        rep = LayerReport(path=("blocks", 0, "fc1", "w"), sparsity=0.5,
+                          obs_loss=1.5, seconds=0.1)
+        j.write(0, rep, kernel=k, mask=m)
+        rec = j.load(0)
+        assert rec.kernel.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(rec.kernel), np.asarray(k))
+        np.testing.assert_array_equal(np.asarray(rec.mask), np.asarray(m))
+        assert rec.report == rep
+        assert j.completed == 1
+
+    def test_completed_is_contiguous_prefix(self, tmp_path):
+        j = PruneJournal(str(tmp_path))
+        rep = LayerReport(path=("p",), sparsity=0.0, obs_loss=0.0,
+                          seconds=0.0, skipped=True)
+        j.write(0, rep)
+        j.write(2, rep)                      # gap at 1 → unreachable
+        assert PruneJournal(str(tmp_path)).completed == 1
+
+    def test_stray_tmp_files_ignored(self, tmp_path):
+        j = PruneJournal(str(tmp_path))
+        rep = LayerReport(path=("p",), sparsity=0.0, obs_loss=0.0,
+                          seconds=0.0, skipped=True)
+        j.write(0, rep)
+        # a torn atomic write leaves a tmp file; the scan must not count it
+        open(os.path.join(str(tmp_path), "layers", "00001.json.tmp.1"),
+             "w").close()
+        assert PruneJournal(str(tmp_path)).completed == 1
+
+    def test_journal_write_fault_leaves_journal_untouched(self, tmp_path):
+        j = PruneJournal(str(tmp_path))
+        rep = LayerReport(path=("p",), sparsity=0.5, obs_loss=0.0,
+                          seconds=0.0)
+        with pytest.raises(JournalWriteError):
+            j.write(0, rep, kernel=jnp.ones((2, 2)),
+                    faults=FaultPlan.parse("journal_write@0"))
+        assert os.listdir(os.path.join(str(tmp_path), "layers")) == []
+        assert PruneJournal(str(tmp_path)).completed == 0
+
+
+# ==========================================================================
+# uninterrupted journaled run ≡ plain prune_model
+# ==========================================================================
+@pytest.mark.parametrize("cell", sorted(CELLS), ids=sorted(CELLS))
+def test_journaled_run_matches_plain(problem, tmp_path, cell):
+    params, adapter, batches = problem
+    oracle, oracle_rep = prune_model(params, adapter, batches, CELLS[cell])
+    job = PruneJob(str(tmp_path / "job"))
+    pruned, report = job.run(params, adapter, batches, CELLS[cell])
+    _assert_trees_equal(oracle, pruned)
+    _assert_reports_equal(oracle_rep, report)
+    assert os.path.exists(job.report_path())
+    with open(job.report_path()) as f:        # artifact is valid JSON
+        assert json.load(f)["mean_sparsity"] == pytest.approx(0.5)
+
+
+# ==========================================================================
+# the headline property: kill anywhere, resume, bitwise parity
+# ==========================================================================
+@pytest.mark.parametrize("sharded", [False, True], ids=["local", "sharded"])
+@pytest.mark.parametrize("cell", sorted(CELLS), ids=sorted(CELLS))
+@pytest.mark.parametrize("kill", ["journal_write@0", "journal_write@1",
+                                  "journal_write@2", "journal_write@3",
+                                  "calib_batch@2"])
+def test_kill_resume_bitwise_parity(problem, tmp_path, kill, cell, sharded):
+    params, adapter, batches = problem
+    mesh = mesh_1x1() if sharded else None
+    oracle, oracle_rep = prune_model(params, adapter, batches, CELLS[cell],
+                                     mesh=mesh)
+
+    job_dir = str(tmp_path / "job")
+    killed = PruneJob(job_dir, faults=FaultPlan.parse(kill), mesh=mesh)
+    with pytest.raises((JournalWriteError, CalibrationError)):
+        killed.run(params, adapter, batches, CELLS[cell])
+
+    resumed = PruneJob(job_dir, mesh=mesh)
+    pruned, report = resumed.run(params, adapter, batches, CELLS[cell],
+                                 resume=True)
+    _assert_trees_equal(oracle, pruned)
+    _assert_reports_equal(oracle_rep, report)
+
+
+def test_double_kill_then_resume(problem, tmp_path):
+    """Two successive crashes at different boundaries, then recovery."""
+    params, adapter, batches = problem
+    cfg = CELLS["unstructured"]
+    oracle, oracle_rep = prune_model(params, adapter, batches, cfg)
+    job_dir = str(tmp_path / "job")
+    with pytest.raises(JournalWriteError):
+        PruneJob(job_dir, faults=FaultPlan.parse("journal_write@1")).run(
+            params, adapter, batches, cfg)
+    with pytest.raises(JournalWriteError):
+        # counters restart with the process: @1 is now the 3rd layer
+        PruneJob(job_dir, faults=FaultPlan.parse("journal_write@1")).run(
+            params, adapter, batches, cfg, resume=True)
+    pruned, report = PruneJob(job_dir).run(params, adapter, batches, cfg,
+                                           resume=True)
+    _assert_trees_equal(oracle, pruned)
+    _assert_reports_equal(oracle_rep, report)
+
+
+def test_resume_of_finished_job_is_replay(problem, tmp_path):
+    params, adapter, batches = problem
+    cfg = CELLS["unstructured"]
+    job_dir = str(tmp_path / "job")
+    p1, r1 = PruneJob(job_dir).run(params, adapter, batches, cfg)
+    p2, r2 = PruneJob(job_dir).run(params, adapter, batches, cfg,
+                                   resume=True)
+    _assert_trees_equal(p1, p2)
+    _assert_reports_equal(r1, r2)
+    # every layer came from the journal — no solve timing accrued
+    assert all(r.seconds == orig.seconds
+               for r, orig in zip(r2.layers, r1.layers))
+
+
+def test_skip_rules_survive_resume(problem, tmp_path):
+    """Skipped (dense) layers journal kernel-free fragments; resume must
+    restore their reports without touching params."""
+    params, adapter, batches = problem
+    plan = PrunePlan(rules=(
+        PruneRule(match="*/fc2/*", cfg=None, name="skip"),
+        PruneRule(match="*", cfg=CELLS["unstructured"]),
+    ))
+    oracle, oracle_rep = prune_model(params, adapter, batches, plan)
+    job_dir = str(tmp_path / "job")
+    with pytest.raises(JournalWriteError):
+        PruneJob(job_dir, faults=FaultPlan.parse("journal_write@2")).run(
+            params, adapter, batches, plan)
+    pruned, report = PruneJob(job_dir).run(params, adapter, batches, plan,
+                                           resume=True)
+    _assert_trees_equal(oracle, pruned)
+    _assert_reports_equal(oracle_rep, report)
+    assert sum(r.skipped for r in report.layers) == 2
+
+
+# ==========================================================================
+# resume validation: refuse to blend a journal with a different run
+# ==========================================================================
+class TestResumeValidation:
+    def _start_killed_job(self, problem, job_dir):
+        params, adapter, batches = problem
+        with pytest.raises(JournalWriteError):
+            PruneJob(job_dir, faults=FaultPlan.parse("journal_write@1")).run(
+                params, adapter, batches, CELLS["unstructured"])
+
+    def test_resume_without_job_raises(self, problem, tmp_path):
+        params, adapter, batches = problem
+        with pytest.raises(FileNotFoundError, match="nothing\n?.*to resume"):
+            PruneJob(str(tmp_path / "nope")).run(
+                params, adapter, batches, CELLS["unstructured"],
+                resume=True)
+
+    def test_fresh_run_refuses_existing_job(self, problem, tmp_path):
+        params, adapter, batches = problem
+        job_dir = str(tmp_path / "job")
+        self._start_killed_job(problem, job_dir)
+        with pytest.raises(FileExistsError, match="resume"):
+            PruneJob(job_dir).run(params, adapter, batches,
+                                  CELLS["unstructured"])
+
+    def test_plan_mismatch_rejected(self, problem, tmp_path):
+        params, adapter, batches = problem
+        job_dir = str(tmp_path / "job")
+        self._start_killed_job(problem, job_dir)
+        with pytest.raises(ValueError, match="plan does not match"):
+            PruneJob(job_dir).run(params, adapter, batches, CELLS["nm"],
+                                  resume=True)
+
+    def test_batch_mismatch_rejected(self, problem, tmp_path):
+        params, adapter, batches = problem
+        job_dir = str(tmp_path / "job")
+        self._start_killed_job(problem, job_dir)
+        other = [b + 1.0 for b in batches]
+        assert batch_digest(other) != batch_digest(batches)
+        with pytest.raises(ValueError, match="digest mismatch"):
+            PruneJob(job_dir).run(params, adapter, other,
+                                  CELLS["unstructured"], resume=True)
+
+    def test_policy_mismatch_rejected(self, problem, tmp_path):
+        params, adapter, batches = problem
+        job_dir = str(tmp_path / "job")
+        self._start_killed_job(problem, job_dir)
+        with pytest.raises(ValueError, match="policy differs"):
+            PruneJob(job_dir, on_singular="fail").run(
+                params, adapter, batches, CELLS["unstructured"],
+                resume=True)
+
+    def test_journal_path_mismatch_rejected(self, problem, tmp_path):
+        """A journal fragment naming a different layer than the replay
+        expects means the job dir belongs to a different model."""
+        params, adapter, batches = problem
+        job_dir = str(tmp_path / "job")
+        self._start_killed_job(problem, job_dir)
+        frag = os.path.join(job_dir, "layers", "00000.json")
+        with open(frag) as f:
+            d = json.load(f)
+        d["report"]["path"] = ["blocks", 9, "zzz", "w"]
+        with open(frag, "w") as f:
+            json.dump(d, f)
+        with pytest.raises(ValueError, match="different model"):
+            PruneJob(job_dir).run(params, adapter, batches,
+                                  CELLS["unstructured"], resume=True)
