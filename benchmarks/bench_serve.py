@@ -76,6 +76,16 @@ def bench_config(d: int) -> ModelConfig:
         vocab_size=512, dtype="float32")
 
 
+def moe_bench_config(d: int) -> ModelConfig:
+    """MoE sibling of ``bench_config``: 8 experts top-2, expert d_ff=d/2 —
+    expert stacks dominate the weight bytes, as in real MoE configs."""
+    return ModelConfig(
+        name=f"bench-moe-{d}", family="moe", num_layers=2, d_model=d,
+        num_heads=4, num_kv_heads=4, head_dim=d // 4, d_ff=0,
+        vocab_size=512, num_experts=8, num_experts_per_tok=2,
+        moe_d_ff=d // 2, capacity_factor=4.0, dtype="float32")
+
+
 def _onehot_matmul(x, values, indices, n, m, b, idx_bits=8):
     """The pre-rework ref formulation: fp32 one-hot expansion — O(m/keep)×
     extra FLOPs and a (c, g, keep, m) fp32 intermediate.  Benchmark-only."""
@@ -155,6 +165,54 @@ def run_grid(grid, *, warmup=1, iters=5, verbose=True) -> list[dict]:
                   f"(scatter vs one-hot {t_onehot / t_ref:.2f}x, "
                   f"bytes {streamed_comp / total_dense:.3f} of dense)",
                   flush=True)
+    return rows
+
+
+def run_moe(*, d: int, B: int, warmup=1, iters=5, verbose=True) -> list[dict]:
+    """MoE decode: dense expert stacks vs stacked-nm compressed-resident
+    (``NmStackedCompressed`` leaves through layers.stacked_dense — the
+    per-expert container that ends the experts-silently-serve-dense gap).
+    Same protocol as ``run_grid``; expert + attn linears all pack 2:4."""
+    from repro.core.sparsity import NmStackedCompressed
+
+    cfg = moe_bench_config(d)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batches = calibration_batches(cfg, num_samples=4, seq_len=16, batch=4)
+    pruned, report = prune_model(
+        params, ModelAdapter(model), batches,
+        PruneConfig(method="magnitude", pattern="nm", n=2, m=4))
+    comp = compress_params(pruned, report.masks, 2, 4)
+    stacked = [l for l in jax.tree.leaves(
+        comp, is_leaf=lambda x: isinstance(x, NmStackedCompressed))
+        if isinstance(l, NmStackedCompressed)]
+    assert stacked, "MoE bench must serve stacked-compressed expert leaves"
+    cbytes, dbytes = compressed_bytes(comp)
+    total_dense = _param_bytes(pruned)
+    streamed_comp = total_dense - dbytes + cbytes
+
+    t_dense = _decode_seconds(model, pruned, B, warmup=warmup, iters=iters)
+    t_ref = _decode_seconds(model, comp, B,
+                            nm_cfg=NmKernelConfig(impl="ref"),
+                            warmup=warmup, iters=iters)
+    rows = []
+    for variant, t, streamed in (("moe_dense", t_dense, total_dense),
+                                 ("moe_nm_ref", t_ref, streamed_comp)):
+        rows.append({
+            "variant": variant, "d_model": d, "n": 2, "m": 4, "batch": B,
+            "num_experts": cfg.num_experts,
+            "experts_per_tok": cfg.num_experts_per_tok,
+            "stacked_leaves": len(stacked),
+            "seconds_per_step": t, "tokens_per_s": B / t,
+            "streamed_weight_bytes": streamed,
+            "weight_bytes_ratio": streamed / total_dense,
+        })
+    if verbose:
+        print(f"moe d={d:4d} 2:4 B={B} E={cfg.num_experts}: "
+              f"dense {t_dense*1e3:7.2f} ms  "
+              f"stacked_nm {t_ref*1e3:7.2f} ms  "
+              f"(bytes {streamed_comp / total_dense:.3f} of dense, "
+              f"{len(stacked)} stacked leaves)", flush=True)
     return rows
 
 
@@ -462,6 +520,10 @@ def main() -> None:
 
     grid = QUICK_GRID if args.quick else FULL_GRID
     rows = run_grid(grid, warmup=args.warmup, iters=args.iters)
+    moe_rows = (run_moe(d=64, B=4, warmup=args.warmup, iters=args.iters)
+                if args.quick else
+                run_moe(d=128, B=8, warmup=args.warmup, iters=args.iters))
+    rows.extend(moe_rows)
 
     trace_rows: list[dict] = []
     if args.trace:
@@ -498,6 +560,15 @@ def main() -> None:
         "results": rows,
         "scatter_vs_onehot_speedup": speedups,
         "scatter_vs_onehot_median": float(np.median(list(speedups.values()))),
+    }
+    moe_dense = next(r for r in moe_rows if r["variant"] == "moe_dense")
+    moe_nm = next(r for r in moe_rows if r["variant"] == "moe_nm_ref")
+    record["moe"] = {
+        "d_model": moe_dense["d_model"],
+        "stacked_leaves": moe_nm["stacked_leaves"],
+        "stacked_vs_dense_step_ratio": (
+            moe_nm["seconds_per_step"] / moe_dense["seconds_per_step"]),
+        "weight_bytes_ratio": moe_nm["weight_bytes_ratio"],
     }
     if trace_rows:
         cont = next(r for r in trace_rows

@@ -65,13 +65,22 @@ class HessianAccumulator:
             skipped=jnp.zeros((), dtype=jnp.float32),
         )
 
-    def update(self, x: Array) -> "HessianAccumulator":
+    def update(self, x: Array,
+               valid: "Array | None" = None) -> "HessianAccumulator":
         """Accumulate a calibration batch.
 
         Args:
           x: token-major activations (..., b) — the LAST axis is always the
              feature axis.  (The paper writes X as (b, a) feature-major; we
              standardize on token-major and transpose at the boundary.)
+          valid: optional bool row mask (matching x's leading axes): rows
+             marked False are zeroed *and excluded from* ``count``.  MoE
+             capacity buffers tape the full (C, b) buffer; without the mask
+             the zero-padded rows inflate the sample count — deflating
+             tr(H)/b (which biases the hessian_trace allocation policy
+             against low-traffic experts) and letting a never-routed
+             expert pass ``finalize(min_count=)`` with an all-zero
+             Hessian.
 
         A batch containing any NaN/Inf is **skipped whole** (its tokens
         contribute nothing to ``xtx``/``count``; ``skipped`` increments):
@@ -79,14 +88,22 @@ class HessianAccumulator:
         every weight the OBS solve touches — non-finite.  Finite batches
         are accumulated bitwise as before (the guard multiplies by an
         all-ones mask), and the check is one fused reduction, jit-safe.
+        Invalid rows are masked *before* the finiteness check: garbage in
+        a never-routed capacity slot must not poison a healthy batch.
         """
         flat = x.reshape(-1, x.shape[-1]).astype(jnp.float32)   # (tokens, b)
+        if valid is not None:
+            v = valid.reshape(-1)
+            flat = jnp.where(v[:, None], flat, 0.0)
+            rows = jnp.sum(v.astype(jnp.float32))
+        else:
+            rows = jnp.float32(flat.shape[0])
         ok = jnp.all(jnp.isfinite(flat))
         flat = jnp.where(ok, flat, 0.0)
         xtx = flat.T @ flat
         return HessianAccumulator(
             self.xtx + xtx,
-            self.count + jnp.where(ok, jnp.float32(flat.shape[0]), 0.0),
+            self.count + jnp.where(ok, rows, 0.0),
             self.skipped + jnp.where(ok, 0.0, 1.0),
         )
 

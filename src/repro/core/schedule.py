@@ -289,6 +289,11 @@ def prune_model(
             for path, x in caps.items():
                 if path not in accs and plan.cfg_for(path) is None:
                     continue                 # skip rule: layer stays dense
+                # MoE expert slices tape (activations, row-validity) pairs:
+                # only routed capacity rows count as calibration samples
+                valid = None
+                if isinstance(x, tuple):
+                    x, valid = x
                 if path not in accs:
                     accs[path] = HessianAccumulator.init(x.shape[-1])
                 if faults is not None and \
@@ -296,7 +301,7 @@ def prune_model(
                     # poisoned activations: the accumulator's non-finite
                     # guard must swallow the batch, not the Hessian
                     x = jnp.full_like(x, jnp.nan)
-                accs[path] = accs[path].update(x)
+                accs[path] = accs[path].update(x, valid)
 
         # ---- prune every linear in the block ------------------------------
         for path in adapter.block_linear_paths(params, i):
@@ -415,9 +420,12 @@ def collect_hessian_stats(
             out, caps = block_cap(params, carry, i)
             next_carries.append(out)
             for path, x in caps.items():
+                valid = None
+                if isinstance(x, tuple):
+                    x, valid = x
                 if path not in accs:
                     accs[path] = HessianAccumulator.init(x.shape[-1])
-                accs[path] = accs[path].update(x)
+                accs[path] = accs[path].update(x, valid)
         carries = next_carries
         for path in adapter.block_linear_paths(params, i):
             if path not in accs:

@@ -86,6 +86,52 @@ def unpack_indices4(packed: Array, length: int) -> Array:
     return both[:, :length].astype(jnp.int8)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class NmStackedCompressed:
+    """Pytree container for E stacked n:m-compressed expert slices.
+
+    The MoE analogue of :class:`NmCompressed`: one leaf holds every expert
+    of a stacked ``(E, in, out)`` kernel in compressed form, so expert
+    weights stay packed through jit / eval_shape / sharding machinery and
+    the serving engine — a single ``NmCompressed`` cannot live *inside* an
+    array leaf, but one stacked container can *replace* it.
+
+    Every expert keeps its **own** mask (indices differ per slice); the
+    ``(n, m)`` cell is shared across the stack — per-expert cells would
+    make the layout ragged.  ``(n, m, b, E, idx_bits)`` are static aux
+    data; only ``values``/``indices`` are traced.
+    """
+
+    values: Array    # (E, c, b // m * (m-n)) kept weights, group-major
+    indices: Array   # int8 in-group positions; (E, c, g·keep) for
+                     # idx_bits=8, (E, c, ⌈g·keep/2⌉) nibble-packed for 4
+    n: int
+    m: int
+    b: int           # original column count (per expert)
+    E: int           # number of stacked expert slices
+    idx_bits: int = 4
+
+    @property
+    def kept_per_group(self) -> int:
+        return self.m - self.n
+
+    def unpacked_indices(self) -> Array:
+        """int8 (E, c, g·keep) in-group positions regardless of idx_bits."""
+        length = (self.b // self.m) * self.kept_per_group
+        if self.idx_bits == 4:
+            return jax.vmap(lambda i: unpack_indices4(i, length))(self.indices)
+        return self.indices
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.n, self.m, self.b,
+                                             self.E, self.idx_bits)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+
 def pack_nm(w: Array, mask: Array, n: int, m: int, *,
             idx_bits: int = 4) -> NmCompressed:
     """Compress an n:m-masked matrix (mask 1.0 = pruned).
@@ -130,9 +176,39 @@ def unpack_nm(packed: NmCompressed) -> Array:
     return dense.reshape(c, packed.b)
 
 
-def compression_ratio(packed: NmCompressed) -> float:
+def pack_nm_stacked(w: Array, mask: Array, n: int, m: int, *,
+                    idx_bits: int = 4) -> NmStackedCompressed:
+    """Compress E stacked n:m-masked expert slices (mask 1.0 = pruned).
+
+    ``w``/``mask`` are (E, c, b) paper layout per expert; the per-slice
+    packing is exactly :func:`pack_nm` vmapped over the expert axis, so
+    expert e of the stacked container is bitwise ``pack_nm(w[e], mask[e])``.
+    """
+    assert w.ndim == 3, f"need stacked (E, c, b) weights, got {w.shape}"
+    assert w.shape == mask.shape, (w.shape, mask.shape)
+    per = jax.vmap(lambda we, me: pack_nm(we, me, n, m, idx_bits=idx_bits))(
+        w, mask)
+    return NmStackedCompressed(
+        values=per.values, indices=per.indices,
+        n=n, m=m, b=w.shape[-1], E=w.shape[0], idx_bits=idx_bits,
+    )
+
+
+def unpack_nm_stacked(packed: NmStackedCompressed) -> Array:
+    """Decompress to dense (E, c, b) — the pure-jnp oracle for the stacked
+    kernel path (``unpack_nm`` vmapped over the expert axis)."""
+    def one(v, i):
+        return unpack_nm(NmCompressed(v, i, packed.n, packed.m, packed.b,
+                                      packed.idx_bits))
+
+    return jax.vmap(one)(packed.values, packed.indices)
+
+
+def compression_ratio(packed: "NmCompressed | NmStackedCompressed") -> float:
     """HBM bytes(compressed) / bytes(dense) — drives the §Roofline memory term."""
     val_bytes = packed.values.size * packed.values.dtype.itemsize
     idx_bytes = packed.indices.size  # int8 bytes (4-bit packing: 2 idx/byte)
-    dense_bytes = packed.values.shape[0] * packed.b * packed.values.dtype.itemsize
+    c = packed.values.shape[-2]
+    experts = packed.E if isinstance(packed, NmStackedCompressed) else 1
+    dense_bytes = experts * c * packed.b * packed.values.dtype.itemsize
     return (val_bytes + idx_bytes) / dense_bytes

@@ -20,7 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import NmCompressed
+from repro.core.sparsity import NmCompressed, NmStackedCompressed
 from repro.kernels import nm_spmm, hessian_accum, ref
 
 Array = jax.Array
@@ -125,6 +125,40 @@ def nm_matmul(x: Array, packed: NmCompressed, *, impl: str = "",
         interpret=_interpret(), **tiles,
     )
     return y[:B, :c].reshape(*lead, -1)
+
+
+def nm_matmul_stacked(x: Array, packed: NmStackedCompressed, *,
+                      impl: str = "", cfg: NmKernelConfig | None = None,
+                      block_b: int = 0, block_c: int = 0,
+                      block_x: int = 0) -> Array:
+    """Batched expert matmul over one stacked compressed leaf:
+    x (E, C, b) → y (E, C, c) with y[e] = x[e] @ W_eᵀ.
+
+    The MoE dispatch entry for ``layers.stacked_dense`` — the active
+    ``NmKernelConfig`` (``layers.nm_kernel_scope``) picks the impl exactly
+    as for 2-D leaves.  'ref' runs the vmapped masked-select expansion +
+    one batched dot; 'pallas' launches the 2-D Pallas kernel once per
+    expert slice (static E — each launch pads/tiles like the unstacked
+    path, sharing ``choose_tiles``).
+    """
+    cfg = cfg if cfg is not None else NmKernelConfig()
+    use = _resolve_impl(impl or cfg.impl)
+    if use == "ref":
+        return ref.nm_matmul_stacked_ref(
+            x, packed.values, packed.indices, packed.n, packed.m, packed.b,
+            packed.idx_bits,
+        )
+    outs = [
+        nm_matmul(
+            x[e],
+            NmCompressed(packed.values[e], packed.indices[e], packed.n,
+                         packed.m, packed.b, packed.idx_bits),
+            impl=use, cfg=cfg, block_b=block_b, block_c=block_c,
+            block_x=block_x,
+        )
+        for e in range(packed.E)
+    ]
+    return jnp.stack(outs)
 
 
 def hessian_xtx(x: Array, *, impl: str = "pallas", **tiles) -> Array:

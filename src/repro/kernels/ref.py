@@ -53,6 +53,34 @@ def nm_matmul_ref(x: Array, values: Array, indices: Array, n: int, m: int,
     return (x @ w.astype(x.dtype).T).astype(x.dtype)
 
 
+def nm_expand_stacked(values: Array, indices: Array, n: int, m: int, b: int,
+                      idx_bits: int = 8) -> Array:
+    """Dense (E, c, b) from stacked group-major n:m storage.
+
+    The masked-select keep-loop of :func:`nm_expand` vmapped over the
+    leading expert axis — placement only, bit-exact in the stored dtype,
+    and the formulation a stacked Pallas kernel would run per expert tile.
+    """
+    return jax.vmap(
+        lambda v, i: nm_expand(v, i, n, m, b, idx_bits))(values, indices)
+
+
+def nm_matmul_stacked_ref(x: Array, values: Array, indices: Array, n: int,
+                          m: int, b: int, idx_bits: int = 8) -> Array:
+    """Batched expert matmul from compressed storage: x (E, C, b) →
+    y (E, C, c) with y[e] = x[e] @ dense(e)ᵀ.
+
+    The expansion is bit-exact and the einsum is the identical batched dot
+    ``models/layers.stacked_dense`` emits for dense (E, b→in, c→out)
+    kernels (same contraction dim, same order), so stacked-compressed
+    serving is bit-equal to serving the decompressed expert stack
+    (asserted in tests/test_stacked_compressed.py).
+    """
+    w = nm_expand_stacked(values, indices, n, m, b, idx_bits)   # (E, c, b)
+    w = jnp.swapaxes(w.astype(x.dtype), -1, -2)                 # (E, b, c)
+    return jnp.einsum("ecd,edf->ecf", x, w).astype(x.dtype)
+
+
 def hessian_ref(x: Array) -> Array:
     """H = 2·XᵀX for token-major X (tokens, b) — fp32 accumulation."""
     x32 = x.astype(jnp.float32)

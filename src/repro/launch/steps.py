@@ -330,16 +330,22 @@ class DecodeOptions:
 
 def abstract_nm_params(model, n: int | None = None, m: int | None = None,
                        *, plan=None):
-    """Abstract params with prunable 2-D linears swapped for NmCompressed
-    ShapeDtypeStruct pairs (3-D expert stacks kept dense — per-expert
-    compression is a straightforward extension).
+    """Abstract params with prunable linears swapped for compressed
+    ShapeDtypeStruct pairs — 2-D kernels lower to ``NmCompressed`` and
+    3-D MoE expert stacks to one ``NmStackedCompressed`` leaf (values
+    (E, d_out, g·keep) + nibble-packed indices), mirroring what
+    ``serve.compressed.compress_params`` produces.
 
     With a global ``(n, m)`` every eligible linear compresses; with a
     ``PrunePlan`` each path resolves through the plan's rules and only
     paths whose cell has pattern "nm" compress, with *their own* (n, m) —
-    mixed dense/compressed residency lowers with per-layer geometry.
+    mixed dense/compressed residency lowers with per-layer geometry.  An
+    expert stack lowers compressed only when every slice resolves to one
+    shared (n, m) cell — the same packability contract compress_params
+    enforces (it warns/raises on the mismatch; here the stack just stays
+    dense in the abstract tree).
     """
-    from repro.core.sparsity import NmCompressed
+    from repro.core.sparsity import NmCompressed, NmStackedCompressed
 
     if plan is None and (n is None or m is None):
         raise ValueError("abstract_nm_params needs (n, m) or plan=")
@@ -351,16 +357,20 @@ def abstract_nm_params(model, n: int | None = None, m: int | None = None,
 
     from repro.core.schedule import get_path, set_path
 
+    stacks: dict[tuple, dict[int, tuple | None]] = {}
     for path in paths:
-        if isinstance(path[-1], int):     # expert slice — skip (stays dense)
-            continue
         if plan is not None:
             cfg = plan.cfg_for(path)
-            if cfg is None or cfg.pattern != "nm":
-                continue                  # dense under this plan
-            pn, pm = cfg.n, cfg.m
+            nm = cfg is not None and cfg.pattern == "nm"
+            pn, pm = (cfg.n, cfg.m) if nm else (None, None)
         else:
-            pn, pm = n, m
+            nm, pn, pm = True, n, m
+        if isinstance(path[-1], int):     # expert slice — group by stack
+            stacks.setdefault(path[:-1], {})[path[-1]] = \
+                (pn, pm) if nm else None
+            continue
+        if not nm:
+            continue                      # dense under this plan
         kernel = get_path(a, path)
         if kernel.ndim != 2:
             continue
@@ -375,6 +385,25 @@ def abstract_nm_params(model, n: int | None = None, m: int | None = None,
             n=pn, m=pm, b=d_in, idx_bits=4,
         )
         a = set_path(a, path[:-1] + ("w",), packed)
+
+    for base, cells in stacks.items():
+        kernel = get_path(a, base)
+        if kernel.ndim != 3:
+            continue
+        E, d_in, d_out = kernel.shape
+        got = {e: c for e, c in cells.items() if c is not None}
+        if set(got) != set(range(E)) or len(set(got.values())) != 1:
+            continue                      # unpackable stack — stays dense
+        pn, pm = next(iter(got.values()))
+        if d_in % pm:
+            continue
+        gk = d_in // pm * (pm - pn)
+        packed = NmStackedCompressed(
+            values=jax.ShapeDtypeStruct((E, d_out, gk), kernel.dtype),
+            indices=jax.ShapeDtypeStruct((E, d_out, (gk + 1) // 2), jnp.int8),
+            n=pn, m=pm, b=d_in, E=E, idx_bits=4,
+        )
+        a = set_path(a, base, packed)
     return a
 
 

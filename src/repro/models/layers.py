@@ -13,7 +13,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import NmCompressed
+from repro.core.sparsity import NmCompressed, NmStackedCompressed
 
 Array = jax.Array
 Tape = dict | None
@@ -101,16 +101,32 @@ def dense(p: dict, x: Array, tape: Tape = None, path: Path = ()) -> Array:
     return y
 
 
-def stacked_dense(p: dict, x: Array, tape: Tape = None, path: Path = ()) -> Array:
+def stacked_dense(p: dict, x: Array, tape: Tape = None, path: Path = (),
+                  valid: Array | None = None) -> Array:
     """Batched expert matmul: x (E, C, d_in) @ W (E, d_in, d_out).
 
+    If the stacked kernel has been swapped for an ``NmStackedCompressed``
+    leaf (per-expert compressed serving), the matmul consumes the
+    compressed representation via kernels/ops.nm_matmul_stacked under the
+    active ``NmKernelConfig`` — the same dispatch contract as ``dense``.
+
     Tape records per-expert activations keyed (path, 'w', e) so the driver
-    prunes each expert slice with its own routed-token Hessian.
+    prunes each expert slice with its own routed-token Hessian.  ``valid``
+    (E, C) bool marks capacity rows holding routed tokens; when threaded
+    (moe_ffn dispatch) each expert's tape entry is an ``(x_e, valid_e)``
+    pair and the Hessian accumulator counts only routed rows — zero-padded
+    capacity slots no longer inflate the calibration sample count.
     """
+    w = p["w"]
+    if isinstance(w, NmStackedCompressed):
+        from repro.kernels import ops as kops
+
+        return kops.nm_matmul_stacked(x, w, cfg=_NM_KERNEL)
     if tape is not None:
-        for e in range(p["w"].shape[0]):
-            tape[path + ("w", e)] = x[e]
-    return jnp.einsum("ecd,edf->ecf", x, p["w"])
+        for e in range(w.shape[0]):
+            tape[path + ("w", e)] = (x[e] if valid is None
+                                     else (x[e], valid[e]))
+    return jnp.einsum("ecd,edf->ecf", x, w)
 
 
 # --------------------------------------------------------------------------

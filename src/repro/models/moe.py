@@ -11,8 +11,12 @@ all-to-all dispatch pattern.
 
 Expert kernels are stored stacked (E, d_in, d_out); the pruning driver
 addresses slice e via path (..., 'w', e) and accumulates that expert's
-Hessian only over tokens routed to it (zero-padded capacity slots contribute
-nothing to XXᵀ).
+Hessian only over tokens routed to it — the dispatch threads an (E, C) row
+validity mask into the tape, so zero-padded capacity slots contribute
+nothing to XXᵀ *and* don't count as calibration samples (a never-routed
+expert fails ``finalize(min_count=)`` instead of passing with a zero
+Hessian).  Router gates renormalize over the assignments that survive the
+capacity drop, after dispatch.
 """
 from __future__ import annotations
 
@@ -61,7 +65,6 @@ def moe_ffn(p: dict, x: Array, cfg, *, tape=None, path=()) -> Array:
     # ---- routing (router stays dense / unpruned) --------------------------
     logits = xt @ p["router"]["w"]                             # (T, E)
     gates, ids = jax.lax.top_k(jax.nn.softmax(logits.astype(jnp.float32)), k)
-    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)     # renorm top-k
 
     # ---- sort-based dispatch ----------------------------------------------
     flat_ids = ids.reshape(-1)                                 # (T*k,)
@@ -78,11 +81,26 @@ def moe_ffn(p: dict, x: Array, cfg, *, tape=None, path=()) -> Array:
     buf = jnp.zeros((E + 1, C, d), xt.dtype).at[dst_e, dst_c].set(xt[s_tok])
     buf = buf[:E]
 
+    # ---- top-k renorm over SURVIVING slots --------------------------------
+    # Renormalizing before the capacity drop would leave overflow-dropped
+    # assignments' weight in the denominator, silently down-scaling the
+    # surviving experts' contribution for that token.  With no overflow the
+    # keep mask is all-True and this is bitwise the plain top-k renorm.
+    keep_tk = jnp.zeros((T * k,), bool).at[order].set(keep).reshape(T, k)
+    gates = jnp.where(keep_tk, gates, 0.0)
+    denom = jnp.sum(gates, axis=-1, keepdims=True)
+    gates = gates / jnp.where(denom > 0.0, denom, 1.0)  # all-dropped token: 0
+
     # ---- expert computation (shardable on E) -------------------------------
+    # row validity (E, C): which capacity rows hold routed tokens — threaded
+    # into the tape so per-expert Hessians count only real samples
+    valid = None
+    if tape is not None:
+        valid = jnp.zeros((E + 1, C), bool).at[dst_e, dst_c].set(keep)[:E]
     act = L.act_fn(cfg.act)
-    h = act(L.stacked_dense(p["gate"], buf, tape, path + ("gate",))) * \
-        L.stacked_dense(p["up"], buf, tape, path + ("up",))
-    out_buf = L.stacked_dense(p["down"], h, tape, path + ("down",))  # (E,C,d)
+    h = act(L.stacked_dense(p["gate"], buf, tape, path + ("gate",), valid)) * \
+        L.stacked_dense(p["up"], buf, tape, path + ("up",), valid)
+    out_buf = L.stacked_dense(p["down"], h, tape, path + ("down",), valid)  # (E,C,d)
 
     # ---- gather back + combine --------------------------------------------
     y_sorted = jnp.where(keep[:, None], out_buf[dst_e.clip(0, E - 1), dst_c], 0.0)

@@ -1,7 +1,8 @@
 """Serving: batched prefill/decode engine, paged KV allocator, n:m
 compressed decode weights, and fault-supervised recovery."""
 from repro.serve.engine import Request, ServeConfig, ServingEngine
-from repro.serve.compressed import compress_params, decompress_params
+from repro.serve.compressed import (CompressionDowngrade, compress_params,
+                                    decompress_params)
 from repro.serve.faults import (DeviceOom, EngineDown, EngineFault,
                                 FaultPlan, FaultSpec, InjectedFault,
                                 NonFiniteLogits, QueueFull,
@@ -12,7 +13,7 @@ from repro.serve.supervisor import Supervisor, SupervisorConfig
 
 __all__ = [
     "Request", "ServeConfig", "ServingEngine",
-    "compress_params", "decompress_params",
+    "CompressionDowngrade", "compress_params", "decompress_params",
     "Pager", "PagePool", "PagerAuditError", "PoolExhausted", "PrefixCache",
     "FaultPlan", "FaultSpec", "EngineFault", "InjectedFault", "DeviceOom",
     "NonFiniteLogits", "StepDeadlineExceeded", "SnapshotWriteError",

@@ -6,26 +6,47 @@ feeds sparse tensor cores; on TPU the win is HBM traffic — decode is
 memory-bound, so streaming ~56-62% of the dense bytes moves the dominant
 roofline term directly (kernels/nm_spmm.py is the matching Pallas kernel).
 
-``compress_params`` swaps masked linears for ``NmCompressed`` leaves; the
-serving engine keeps that representation resident end-to-end.
-``decompress_params`` is the inverse — it is **not** on the serve path, it
-survives as the correctness oracle the engine is tested against.
+``compress_params`` swaps masked linears for ``NmCompressed`` leaves; MoE
+expert stacks — masks keyed by integer-tailed paths (..., 'w', e) — pack
+into one ``NmStackedCompressed`` leaf per stacked kernel, so expert FFNs
+serve compressed-resident like every other linear.  The serving engine
+keeps those representations resident end-to-end.  ``decompress_params`` is
+the inverse — it is **not** on the serve path, it survives as the
+correctness oracle the engine is tested against.
+
+Any mask that *cannot* be packed (partial expert coverage, mixed n:m cells
+inside one stack) is a residency **downgrade**: the layer would silently
+serve dense.  ``compress_params`` warns (``CompressionDowngrade``) by
+default and raises under ``strict=True`` — there is no silent-skip path.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 import jax.numpy as jnp
 
-from repro.core.plan import PrunePlan
+from repro.core.plan import PrunePlan, path_str
 from repro.core.schedule import get_path, set_path
-from repro.core.sparsity import NmCompressed, pack_nm, unpack_nm
+from repro.core.sparsity import (NmCompressed, NmStackedCompressed, pack_nm,
+                                 pack_nm_stacked, unpack_nm,
+                                 unpack_nm_stacked)
+
+
+class CompressionDowngrade(UserWarning):
+    """A masked layer could not be packed and will serve dense."""
+
+
+def _downgrade(msg: str, strict: bool) -> None:
+    if strict:
+        raise ValueError(msg)
+    warnings.warn(msg, CompressionDowngrade, stacklevel=3)
 
 
 def compress_params(params, masks: dict[tuple, Any], n: int | None = None,
                     m: int | None = None, *, plan: PrunePlan | None = None,
-                    idx_bits: int = 4):
-    """Replace masked (in, out) kernels with NmCompressed.
+                    idx_bits: int = 4, strict: bool = False):
+    """Replace masked (in, out) kernels with NmCompressed leaves.
 
     Masks are keyed by param path (core/schedule.py layout, mask 1.0 =
     pruned, stored (in, out) like the kernel).  The paper's layout is
@@ -42,37 +63,78 @@ def compress_params(params, masks: dict[tuple, Any], n: int | None = None,
       stays dense.  That is the mixed-residency serving artifact — the
       engine streams NmCompressed leaves through the n:m kernel and dense
       leaves through plain matmuls, per layer.
+
+    MoE expert slices — mask paths with an integer tail (..., 'w', e) into
+    a stacked (E, in, out) kernel — are grouped by their base path and
+    packed into **one** ``NmStackedCompressed`` leaf, provided every expert
+    slice of the stack is masked under a single shared (n, m) cell.  A
+    stack that cannot be packed (partial coverage, mixed cells) is a
+    residency downgrade: warned via ``CompressionDowngrade``, raised under
+    ``strict=True``.  Stacks whose slices are all non-n:m (unstructured
+    experts, skip rules) stay dense by design — no warning.
     """
     if plan is None and (n is None or m is None):
         raise ValueError("compress_params needs (n, m) or plan=")
     out = params
+    # base path of the stacked kernel -> {expert: (mask, n, m) | None}
+    # (None marks a masked slice whose plan cell is not n:m)
+    stacks: dict[tuple, dict[int, tuple | None]] = {}
     for path, mask in masks.items():
-        if isinstance(path[-1], int):
-            # stacked expert slice: an NmCompressed cannot live inside an
-            # (E, in, out) array leaf, so expert slices stay dense — same
-            # contract as launch/steps.abstract_nm_params (ROADMAP item)
-            continue
         if plan is not None:
             cfg = plan.cfg_for(path)
-            if cfg is None or cfg.pattern != "nm":
-                continue                   # stays dense in the serve tree
-            pn, pm = cfg.n, cfg.m
+            nm = cfg is not None and cfg.pattern == "nm"
+            pn, pm = (cfg.n, cfg.m) if nm else (None, None)
         else:
-            pn, pm = n, m
+            nm, pn, pm = True, n, m
+        if isinstance(path[-1], int):
+            base, e = path[:-1], path[-1]
+            stacks.setdefault(base, {})[e] = (mask, pn, pm) if nm else None
+            continue
+        if not nm:
+            continue                       # stays dense in the serve tree
         kernel = get_path(params, path)
         w_cb = kernel.T                    # (out, in) = (c, b)
         m_cb = mask.T
         packed = pack_nm(w_cb, m_cb, pn, pm, idx_bits=idx_bits)
         out = set_path(out, path, packed)
+
+    for base, slices in sorted(stacks.items(), key=lambda kv: path_str(kv[0])):
+        nm_slices = {e: v for e, v in slices.items() if v is not None}
+        if not nm_slices:
+            continue                       # all-unstructured stack: by design
+        kernel = get_path(params, base)    # (E, in, out)
+        E = kernel.shape[0]
+        cells = {v[1:] for v in nm_slices.values()}
+        problems = []
+        if len(cells) > 1:
+            problems.append(f"mixed n:m cells {sorted(cells)}")
+        missing = sorted(set(range(E)) - set(nm_slices))
+        if missing:
+            problems.append(f"experts {missing} not n:m-masked")
+        if problems:
+            _downgrade(
+                f"cannot pack expert stack {path_str(base)!r} "
+                f"({'; '.join(problems)}); the stack will SERVE DENSE — "
+                "align the recipe so every expert slice shares one (n, m) "
+                "cell, or pass strict=False knowingly", strict)
+            continue
+        pn, pm = next(iter(cells))
+        w = jnp.swapaxes(kernel, -1, -2)   # (E, c, b) paper layout per slice
+        mk = jnp.stack([jnp.swapaxes(nm_slices[e][0], -1, -2)
+                        for e in range(E)])
+        out = set_path(out, base,
+                       pack_nm_stacked(w, mk, pn, pm, idx_bits=idx_bits))
     return out
 
 
 def decompress_params(params):
-    """Inverse of compress_params — NmCompressed leaves → dense kernels."""
+    """Inverse of compress_params — compressed leaves → dense kernels."""
 
     def walk(node):
         if isinstance(node, NmCompressed):
             return unpack_nm(node).T       # back to (in, out)
+        if isinstance(node, NmStackedCompressed):
+            return jnp.swapaxes(unpack_nm_stacked(node), -1, -2)  # (E, in, out)
         if isinstance(node, dict):
             return {k: walk(v) for k, v in node.items()}
         return node
@@ -81,15 +143,18 @@ def decompress_params(params):
 
 
 def compressed_bytes(params) -> tuple[int, int]:
-    """(compressed_bytes, dense_equivalent_bytes) over NmCompressed leaves."""
+    """(compressed_bytes, dense_equivalent_bytes) over compressed leaves
+    (both ``NmCompressed`` and stacked-expert ``NmStackedCompressed``)."""
     comp = dense = 0
 
     def walk(node):
         nonlocal comp, dense
-        if isinstance(node, NmCompressed):
+        if isinstance(node, (NmCompressed, NmStackedCompressed)):
             comp += node.values.size * node.values.dtype.itemsize
             comp += node.indices.size  # bytes: 2 indices/byte when idx_bits=4
-            dense += node.values.shape[0] * node.b * node.values.dtype.itemsize
+            experts = node.E if isinstance(node, NmStackedCompressed) else 1
+            c = node.values.shape[-2]
+            dense += experts * c * node.b * node.values.dtype.itemsize
         elif isinstance(node, dict):
             for v in node.values():
                 walk(v)

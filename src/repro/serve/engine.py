@@ -40,9 +40,13 @@ residency needs no engine support beyond this: ``compress_params(...,
 plan=report.plan)`` leaves non-n:m layers as dense kernels, and each
 ``NmCompressed`` leaf carries its own static (n, m, b, idx_bits), so a
 2:4-MLP / dense-attention tree decodes with per-layer geometry out of the
-box (tests/test_plan.py).  Which kernel impl/tiles run is the
-``ServeConfig`` nm_* knobs (falling back to the ``build_model(...,
-nm_kernel=)`` config, then backend auto-dispatch).
+box (tests/test_plan.py).  MoE expert stacks ride the same contract:
+``NmStackedCompressed`` leaves (all E expert slices in one container)
+dispatch inside ``layers.stacked_dense``, so compressed-resident MoE
+decode needs zero engine changes (tests/test_stacked_compressed.py).
+Which kernel impl/tiles run is the ``ServeConfig`` nm_* knobs (falling
+back to the ``build_model(..., nm_kernel=)`` config, then backend
+auto-dispatch).
 """
 from __future__ import annotations
 

@@ -390,9 +390,12 @@ def test_prune_layer_sharded_rejects_unexpanded_allocation():
                             path=("blocks", 0, "mlp", "up", "w"))
 
 
-def test_compress_params_skips_expert_slices():
-    """Stacked MoE expert slices stay dense in both calling modes — an
-    NmCompressed cannot live inside an (E, in, out) array leaf."""
+def test_compress_params_packs_expert_slices():
+    """Stacked MoE expert slices pack into one NmStackedCompressed leaf in
+    both calling modes — there is no silent dense fallback when every
+    slice is masked under one (n, m) cell (partial/mixed stacks warn:
+    tests/test_stacked_compressed.py)."""
+    from repro.core.sparsity import NmStackedCompressed
     from repro.serve.compressed import compress_params
 
     rng = np.random.default_rng(0)
@@ -405,6 +408,7 @@ def test_compress_params_skips_expert_slices():
     }
     mask_cb = jnp.tile(jnp.asarray([1.0, 1.0, 0.0, 0.0]), (d_out, d_in // 4))
     masks = {("moe", "gate", "w", 0): mask_cb.T,
+             ("moe", "gate", "w", 1): mask_cb.T,
              ("mlp", "up", "w"): mask_cb.T}
 
     nm = PruneConfig(pattern="nm", n=2, m=4)
@@ -412,9 +416,10 @@ def test_compress_params_skips_expert_slices():
     for comp in (compress_params(params, masks, 2, 4),
                  compress_params(params, masks, plan=plan)):
         assert isinstance(comp["mlp"]["up"]["w"], NmCompressed)
-        assert isinstance(comp["moe"]["gate"]["w"], jax.Array)  # untouched
-        np.testing.assert_array_equal(np.asarray(comp["moe"]["gate"]["w"]),
-                                      np.asarray(params["moe"]["gate"]["w"]))
+        leaf = comp["moe"]["gate"]["w"]
+        assert isinstance(leaf, NmStackedCompressed)
+        assert (leaf.E, leaf.n, leaf.m, leaf.b) == (E, 2, 4, d_in)
+        assert leaf.values.shape == (E, d_out, d_in // 4 * 2)
 
 
 def test_registry_view_eq_is_total():
