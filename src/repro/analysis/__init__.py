@@ -1,0 +1,29 @@
+"""repro-lint: static enforcement of the repo's jit/serve/fault invariants.
+
+Two layers (DESIGN.md §15):
+
+* **AST rules** (`repro.analysis.rules`) — a visitor-based rule engine over
+  every module in ``src/repro``: jit-purity, fault-hook-cost,
+  serve-never-decompresses, atomic-writes, recompile-hazards,
+  dtype-discipline, import-hygiene.  Findings support per-line
+  ``# lint: disable=<rule>`` suppressions and a checked-in baseline
+  (``lint_baseline.json`` at the repo root) for grandfathered findings.
+
+* **Abstract-eval contracts** (`repro.analysis.contracts`) — drives
+  ``jax.eval_shape`` over the full model zoo × serve representations
+  (dense, NmCompressed, NmStackedCompressed, paged/contiguous) and checks
+  the structural decode/cache/sharding contracts with zero FLOPs.
+
+CLI: ``python -m repro.analysis`` (or the ``repro-lint`` entry point).
+"""
+from __future__ import annotations
+
+from repro.analysis.engine import RepoIndex, run_rules
+from repro.analysis.findings import (Baseline, Finding, findings_from_json,
+                                     findings_to_json)
+from repro.analysis.rules import RULES
+
+__all__ = [
+    "Baseline", "Finding", "RULES", "RepoIndex", "run_rules",
+    "findings_from_json", "findings_to_json",
+]

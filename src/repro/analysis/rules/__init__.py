@@ -1,0 +1,25 @@
+"""Rule registry — import order fixes the report order."""
+from __future__ import annotations
+
+from repro.analysis.rules.jit_purity import JitPurityRule
+from repro.analysis.rules.fault_hooks import FaultHookCostRule
+from repro.analysis.rules.serve_decompress import ServeNeverDecompressesRule
+from repro.analysis.rules.atomic_writes import AtomicWritesRule
+from repro.analysis.rules.recompile import RecompileHazardsRule
+from repro.analysis.rules.dtype_discipline import DtypeDisciplineRule
+from repro.analysis.rules.import_hygiene import ImportHygieneRule
+
+RULES = {
+    rule.name: rule
+    for rule in (
+        JitPurityRule(),
+        FaultHookCostRule(),
+        ServeNeverDecompressesRule(),
+        AtomicWritesRule(),
+        RecompileHazardsRule(),
+        DtypeDisciplineRule(),
+        ImportHygieneRule(),
+    )
+}
+
+__all__ = ["RULES"]

@@ -1,0 +1,87 @@
+"""dtype-discipline: no implicit float64 leaks into traced solves.
+
+The solver stack (core/) and the Pallas kernels (kernels/) are fp32/bf16
+by contract — JAX silently truncates float64 to float32 under the default
+``jax_enable_x64=False``, so a stray ``np.float64`` constant or a
+``np.linalg`` host solve inside a traced function either double-computes
+on host or changes results the day x64 is enabled.  ``core/reference.py``
+is the *deliberate* float64 numpy oracle and is exempt (it is never
+jit-reachable); everything else in core/ that the call graph proves
+traced, plus all of kernels/, must stay in jnp with explicit dtypes.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.callgraph import dotted_name
+from repro.analysis.engine import RepoIndex
+from repro.analysis.findings import Finding
+
+_F64_ATTRS = frozenset({
+    "numpy.float64", "numpy.double", "numpy.longdouble",
+    "jax.numpy.float64",
+})
+_NP_CTORS = frozenset({
+    "numpy.array", "numpy.asarray", "numpy.zeros", "numpy.ones",
+    "numpy.empty", "numpy.full", "numpy.arange", "numpy.linspace",
+    "numpy.eye",
+})
+_EXEMPT_MODULES = frozenset({"repro.core.reference"})
+
+
+def _has_dtype_kw(call: ast.Call) -> bool:
+    return any(kw.arg == "dtype" for kw in call.keywords)
+
+
+class DtypeDisciplineRule:
+    name = "dtype-discipline"
+    severity = "error"
+    description = ("no implicit float64 (np.float64 / np.linalg / "
+                   "dtype-less numpy constructors) in kernels/ or "
+                   "jit-reachable core/ solves")
+
+    def _in_scope(self, info, jit_reach) -> bool:
+        if info.module in _EXEMPT_MODULES:
+            return False
+        if info.module.startswith("repro.kernels."):
+            return True
+        return info.module.startswith("repro.core.") and \
+            info.key in jit_reach
+
+    def check(self, index: RepoIndex) -> list[Finding]:
+        graph = index.graph
+        jit_reach = graph.jit_reachable()
+        findings: list[Finding] = []
+        seen: set[tuple] = set()
+        for info in graph.functions.values():
+            if not self._in_scope(info, jit_reach):
+                continue
+            imports = graph.imports.get(info.module, {})
+            for node in ast.walk(info.node):
+                msg = None
+                if isinstance(node, ast.Attribute):
+                    d = dotted_name(node, imports)
+                    if d in _F64_ATTRS:
+                        msg = (f"{d} in a traced solve — float64 is "
+                               "silently truncated under jax (x64 off)")
+                    elif d is not None and d.startswith("numpy.linalg."):
+                        msg = (f"{d} is a host float64 solve — use "
+                               "jnp.linalg inside traced code")
+                elif isinstance(node, ast.Call):
+                    d = dotted_name(node.func, imports)
+                    if d in _NP_CTORS and not _has_dtype_kw(node):
+                        msg = (f"{d} without dtype= defaults to float64 "
+                               "on host — pass an explicit dtype or use "
+                               "jnp")
+                if msg is None:
+                    continue
+                key = (info.relpath, node.lineno,
+                       getattr(node, "col_offset", 0), msg)
+                if key in seen:       # nested walks over shared subtrees
+                    continue
+                seen.add(key)
+                findings.append(Finding(
+                    path=info.relpath, line=node.lineno, rule=self.name,
+                    severity=self.severity, symbol=info.qualname,
+                    message=msg))
+        return findings

@@ -1,0 +1,80 @@
+"""jit-purity: no host-side effects inside traced code.
+
+A function reachable from a ``jax.jit`` / ``shard_map`` / ``pallas_call``
+entry point runs at *trace time*: ``np.random`` draws a different value
+per retrace (silent nondeterminism), ``time.time()`` bakes the trace
+timestamp into the graph, and ``bool()/int()/float()`` over a traced
+value raises ``TracerBoolConversionError`` only on the first real call.
+All three have bitten JAX codebases at runtime; this rule catches them at
+lint time via call-graph reachability.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import RepoIndex
+from repro.analysis.findings import Finding
+
+# dotted-prefix -> why it's impure under trace
+_FORBIDDEN_PREFIXES = {
+    "numpy.random": "host RNG draws a fresh value per retrace",
+    "time.time": "wall clock is baked in at trace time",
+    "time.perf_counter": "wall clock is baked in at trace time",
+    "time.monotonic": "wall clock is baked in at trace time",
+    "time.sleep": "host sleep has no effect under trace",
+    "datetime.datetime.now": "wall clock is baked in at trace time",
+    "datetime.date.today": "wall clock is baked in at trace time",
+    "random.random": "host RNG draws a fresh value per retrace",
+    "random.randint": "host RNG draws a fresh value per retrace",
+    "random.choice": "host RNG draws a fresh value per retrace",
+    "random.shuffle": "host RNG draws a fresh value per retrace",
+    "random.uniform": "host RNG draws a fresh value per retrace",
+}
+
+# names whose attributes yield traced arrays — `float(jnp.sum(x))` inside a
+# traced function is host concretization
+_TRACED_ROOTS = ("jnp", "jax")
+_CONCRETIZERS = ("bool", "int", "float")
+
+
+def _mentions_traced_root(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in _TRACED_ROOTS:
+            return True
+    return False
+
+
+class JitPurityRule:
+    name = "jit-purity"
+    severity = "error"
+    description = ("no np.random/time/datetime/host concretization inside "
+                   "functions reachable from jit/shard_map/pallas_call")
+
+    def check(self, index: RepoIndex) -> list[Finding]:
+        graph = index.graph
+        findings: list[Finding] = []
+        for key, chain in graph.jit_reachable().items():
+            info = graph.functions[key]
+            imports = graph.imports.get(info.module, {})
+            for dotted, bare, node in info.calls:
+                msg = None
+                if dotted is not None:
+                    for prefix, why in _FORBIDDEN_PREFIXES.items():
+                        if dotted == prefix or dotted.startswith(
+                                prefix + "."):
+                            msg = (f"call to {dotted} in jit-traced code "
+                                   f"({why})")
+                            break
+                if msg is None and dotted in _CONCRETIZERS and node.args \
+                        and _mentions_traced_root(node.args[0]):
+                    msg = (f"{dotted}() over a jax/jnp expression "
+                           "concretizes a tracer (host-side branching)")
+                if msg is None:
+                    continue
+                via = " -> ".join(
+                    graph.functions[k].qualname for k in chain)
+                findings.append(Finding(
+                    path=info.relpath, line=node.lineno, rule=self.name,
+                    severity=self.severity, symbol=info.qualname,
+                    message=f"{msg}; traced via {via}"))
+        return findings

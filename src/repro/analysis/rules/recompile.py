@@ -1,0 +1,177 @@
+"""recompile-hazards: jit signatures that silently retrace per call.
+
+Two shapes of the same production incident (a decode step that recompiled
+every request until tokens/s fell off a cliff):
+
+* a jit'd function whose signature admits Python scalars/dicts that vary
+  per call (an ``int``/``str``/``bool`` parameter, or a scalar default)
+  without listing them in ``static_argnums``/``static_argnames`` — each
+  distinct value is a new trace *input* hashed into the cache key as a
+  weak-typed constant, retracing on every new value;
+
+* ``jax.jit(lambda ...)`` inside a function body — the lambda (and the
+  jit wrapper around it) is a fresh object per call, so the trace cache
+  never hits.  Deliberate once-per-run factory jits carry a
+  ``# lint: disable=recompile-hazards`` or a baseline entry.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.callgraph import dotted_name, module_imports
+from repro.analysis.engine import RepoIndex, ancestors
+from repro.analysis.findings import Finding
+
+_SCALAR_ANNOTATIONS = frozenset({"int", "str", "bool", "float", "dict"})
+
+
+def _literal_set(node: ast.AST | None) -> set:
+    if node is None:
+        return set()
+    try:
+        val = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return set()
+    if isinstance(val, (list, tuple, set)):
+        return set(val)
+    return {val}
+
+
+def _is_scalar_annotation(ann: ast.AST | None) -> bool:
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Name):
+        return ann.id in _SCALAR_ANNOTATIONS
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        head = ann.value.split("[")[0].strip()
+        return head in _SCALAR_ANNOTATIONS
+    if isinstance(ann, ast.Subscript):       # dict[str, int], tuple[int, ...]
+        return isinstance(ann.value, ast.Name) and \
+            ann.value.id in ("dict", "Dict")
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        # `int | None` style optional scalars
+        return _is_scalar_annotation(ann.left) or \
+            _is_scalar_annotation(ann.right)
+    return False
+
+
+def _is_scalar_default(node: ast.AST | None) -> bool:
+    if node is None:
+        return False
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float, str, bool)) and \
+            node.value is not None
+    return isinstance(node, ast.Dict)
+
+
+class RecompileHazardsRule:
+    name = "recompile-hazards"
+    severity = "warning"
+    description = ("jit'd callables with per-call-varying Python "
+                   "scalars/dicts missing static_argnums/static_argnames, "
+                   "and jit-of-lambda inside function bodies")
+
+    def check(self, index: RepoIndex) -> list[Finding]:
+        findings: list[Finding] = []
+        for mf in index.modules():
+            imports = module_imports(mf.tree)
+            defs: dict[str, ast.AST] = {}
+            for node in ast.walk(mf.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    defs.setdefault(node.name, node)
+
+            for node in ast.walk(mf.tree):
+                # decorator form: @jax.jit / @partial(jax.jit, ...)
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        kw = self._jit_keywords(dec, imports)
+                        if kw is None:
+                            continue
+                        findings.extend(self._check_signature(
+                            index, mf, node, bound=0, keywords=kw,
+                            site_line=dec.lineno))
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                if dotted_name(node.func, imports) != "jax.jit" or \
+                        not node.args:
+                    continue
+                target = node.args[0]
+                bound = 0
+                if isinstance(target, ast.Call) and dotted_name(
+                        target.func, imports) in ("functools.partial",
+                                                  "partial"):
+                    bound = len(target.args) - 1
+                    target = target.args[0] if target.args else target
+                if isinstance(target, ast.Lambda):
+                    if any(isinstance(a, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))
+                           for a in ancestors(node)):
+                        findings.append(Finding(
+                            path=mf.relpath, line=node.lineno,
+                            rule=self.name, severity=self.severity,
+                            symbol=index.symbol_at(mf.relpath, node.lineno),
+                            message="jax.jit(lambda ...) inside a function "
+                                    "body builds a fresh jitted callable "
+                                    "per call (trace cache never hits) — "
+                                    "hoist to module scope or cache it"))
+                    continue
+                if isinstance(target, ast.Name) and target.id in defs:
+                    findings.extend(self._check_signature(
+                        index, mf, defs[target.id], bound=bound,
+                        keywords=node.keywords, site_line=node.lineno))
+        return findings
+
+    def _jit_keywords(self, dec: ast.AST, imports) -> list | None:
+        """Decorator's jit keyword list, or None if not a jit decorator."""
+        if dotted_name(dec, imports) == "jax.jit":
+            return []
+        if isinstance(dec, ast.Call):
+            d = dotted_name(dec.func, imports)
+            if d == "jax.jit":
+                return dec.keywords
+            if d in ("functools.partial", "partial") and dec.args and \
+                    dotted_name(dec.args[0], imports) == "jax.jit":
+                return dec.keywords
+        return None
+
+    def _check_signature(self, index: RepoIndex, mf, fn, *, bound: int,
+                         keywords, site_line: int) -> list[Finding]:
+        static_nums = set()
+        static_names = set()
+        for kw in keywords:
+            if kw.arg == "static_argnums":
+                static_nums = {v for v in _literal_set(kw.value)
+                               if isinstance(v, int)}
+            elif kw.arg == "static_argnames":
+                static_names = {v for v in _literal_set(kw.value)
+                                if isinstance(v, str)}
+        findings = []
+        args = fn.args
+        pos = list(args.posonlyargs) + list(args.args)
+        defaults = [None] * (len(pos) - len(args.defaults)) + \
+            list(args.defaults)
+        for i, (p, dflt) in enumerate(zip(pos, defaults)):
+            if p.arg in ("self", "cls") or i < bound:
+                continue
+            if (i - bound) in static_nums or p.arg in static_names:
+                continue
+            if _is_scalar_annotation(p.annotation) or \
+                    _is_scalar_default(dflt):
+                findings.append(self._hazard(index, mf, fn, p, site_line))
+        for p, dflt in zip(args.kwonlyargs, args.kw_defaults):
+            if p.arg in static_names:
+                continue
+            if _is_scalar_annotation(p.annotation) or \
+                    _is_scalar_default(dflt):
+                findings.append(self._hazard(index, mf, fn, p, site_line))
+        return findings
+
+    def _hazard(self, index: RepoIndex, mf, fn, param, site_line: int):
+        return Finding(
+            path=mf.relpath, line=site_line, rule=self.name,
+            severity=self.severity, symbol=fn.name,
+            message=f"jit'd `{fn.name}` takes Python scalar/dict "
+                    f"parameter `{param.arg}` that is not in "
+                    "static_argnums/static_argnames — every new value "
+                    "retraces")

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.util.io import atomic_write_json
+
 SEP = "/"
 
 
@@ -138,10 +140,8 @@ def save_checkpoint(
 
     for s, payload in enumerate(shards):
         np.savez(os.path.join(tmp, f"shard_{s:05d}.npz"), **payload)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
+    atomic_write_json(os.path.join(tmp, "manifest.json"), manifest,
+                      indent=None)
 
     if os.path.exists(final):
         shutil.rmtree(final)

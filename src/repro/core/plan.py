@@ -36,6 +36,7 @@ import re
 from typing import Any, Iterable, Mapping
 
 from repro.core.api import ON_SINGULAR, PruneConfig
+from repro.util.io import atomic_write_text
 
 ALLOCATION_POLICIES = ("uniform", "hessian_trace")
 _SCHEMA_VERSION = 1
@@ -345,9 +346,7 @@ class PrunePlan:
             return cls.from_json(f.read())
 
     def save(self, path: str) -> None:
-        with open(path, "w") as f:
-            f.write(self.to_json())
-            f.write("\n")
+        atomic_write_text(path, self.to_json() + "\n")
 
 
 def as_plan(plan_or_cfg: "PrunePlan | PruneConfig") -> PrunePlan:

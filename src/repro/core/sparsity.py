@@ -19,6 +19,15 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+# Kernel names the serve path consumes as *reshaped raw weights* rather
+# than through the NmCompressed-aware ``layers.dense`` dispatch.  MLA's
+# absorbed decode (models/attention.py mla_decode) reshapes wkv_b into
+# (dkv, H, dn+dv) and contracts it inside einsums — there is no x @ w to
+# stream the compressed form through, so packing it can never serve.
+# compress_params treats these paths as a residency downgrade (the layer
+# stays dense); abstract_nm_params mirrors that in the abstract tree.
+NON_STREAMABLE_KERNELS = frozenset({"wkv_b"})
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)

@@ -89,6 +89,8 @@ class TrainStream:
 
     def __post_init__(self):
         assert self.global_batch % self.num_hosts == 0
+        # jitted once per stream, cached on self for every batch_at call
+        # lint: disable=recompile-hazards
         self._sample = jax.jit(
             lambda key: self.corpus.sample(
                 key, self.global_batch // self.num_hosts, self.seq_len
@@ -122,6 +124,9 @@ class CalibrationStream:
 
     def batches(self) -> list[dict[str, Array]]:
         assert self.num_samples % self.batch == 0
+        # one trace amortized over the whole calibration set (batches()
+        # runs once per prune job)
+        # lint: disable=recompile-hazards
         sample = jax.jit(
             lambda key: self.corpus.sample(key, self.batch, self.seq_len)
         )

@@ -36,6 +36,7 @@ from repro.configs.base import SHAPES
 from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
 from repro.models.model_builder import build_model
+from repro.util.io import atomic_write_json
 
 # --- TPU v5e hardware constants (per chip) --------------------------------
 PEAK_FLOPS = 197e12          # bf16
@@ -353,8 +354,7 @@ def main():
                 try:
                     rec = run_cell(arch, cell, mesh, mesh_name, chips)
                     jax.clear_caches()
-                    with open(path, "w") as f:
-                        json.dump(rec, f, indent=1)
+                    atomic_write_json(path, rec)
                     print(f"OK   {tag}: compile={rec['compile_s']}s "
                           f"bottleneck={rec['bottleneck']} "
                           f"step={rec['roofline_step_s'] * 1e3:.2f}ms "

@@ -23,6 +23,7 @@ from repro.configs import registry
 from repro.configs.base import SHAPES
 from repro.launch import costmodel as CM
 from repro.launch import steps as S
+from repro.util.io import atomic_write_json
 from repro.launch.dryrun import (
     HBM_BW, ICI_BW, PEAK_FLOPS, collective_bytes, mem_dict, model_flops,
 )
@@ -176,8 +177,7 @@ def main():
                   f"bottleneck={rec['bottleneck']} mfu={rec['mfu']:.4f} "
                   f"(compile {rec['compile_s']}s)")
         path = os.path.join(args.out, key.replace("/", "_") + ".json")
-        with open(path, "w") as f:
-            json.dump(records, f, indent=1)
+        atomic_write_json(path, records)
         base, last = records[0], records[-1]
         print(f"== {key}: {base['step_s'] / last['step_s']:.2f}× total, "
               f"mfu {base['mfu']:.4f} → {last['mfu']:.4f}\n")

@@ -345,7 +345,8 @@ def abstract_nm_params(model, n: int | None = None, m: int | None = None,
     enforces (it warns/raises on the mismatch; here the stack just stays
     dense in the abstract tree).
     """
-    from repro.core.sparsity import NmCompressed, NmStackedCompressed
+    from repro.core.sparsity import (NON_STREAMABLE_KERNELS, NmCompressed,
+                                     NmStackedCompressed)
 
     if plan is None and (n is None or m is None):
         raise ValueError("abstract_nm_params needs (n, m) or plan=")
@@ -371,6 +372,10 @@ def abstract_nm_params(model, n: int | None = None, m: int | None = None,
             continue
         if not nm:
             continue                      # dense under this plan
+        if any(p in NON_STREAMABLE_KERNELS
+               for p in path if isinstance(p, str)):
+            continue                      # absorbed-decode raw weight —
+            #                               compress_params downgrades it
         kernel = get_path(a, path)
         if kernel.ndim != 2:
             continue

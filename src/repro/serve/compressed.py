@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 from repro.core.plan import PrunePlan, path_str
 from repro.core.schedule import get_path, set_path
-from repro.core.sparsity import (NmCompressed, NmStackedCompressed, pack_nm,
+from repro.core.sparsity import (NON_STREAMABLE_KERNELS, NmCompressed,
+                                 NmStackedCompressed, pack_nm,
                                  pack_nm_stacked, unpack_nm,
                                  unpack_nm_stacked)
 
@@ -92,6 +93,13 @@ def compress_params(params, masks: dict[tuple, Any], n: int | None = None,
             continue
         if not nm:
             continue                       # stays dense in the serve tree
+        if any(p in NON_STREAMABLE_KERNELS
+               for p in path if isinstance(p, str)):
+            _downgrade(
+                f"kernel {path_str(path)!r} is consumed as a reshaped raw "
+                "weight by the absorbed MLA decode and cannot stream "
+                "NmCompressed; the layer will SERVE DENSE", strict)
+            continue
         kernel = get_path(params, path)
         w_cb = kernel.T                    # (out, in) = (c, b)
         m_cb = mask.T

@@ -4,17 +4,16 @@ The hook machinery (``FaultPlan``/``FaultSpec``, site registry, exception
 taxonomy) lives in :mod:`repro.faults` so the prune-job runtime
 (``core/jobs.py``) and the serving stack share one deterministic
 injection engine; this module re-exports it unchanged for the serving
-imports that predate the move.  See ``repro/faults.py`` for the site
-catalogue (serving sites: decode_logits, decode_stall, prefill,
-pager_fault_in, snapshot_write, sse_stall) and the trigger model.
+imports that predate the move.  A star import keeps the shim total —
+names added to the core propagate without edits here (repro-lint's
+import-hygiene rule) — while ``__all__`` still curates the serve-facing
+surface.  See ``repro/faults.py`` for the site catalogue (serving sites:
+decode_logits, decode_stall, prefill, pager_fault_in, snapshot_write,
+sse_stall) and the trigger model.
 """
 from __future__ import annotations
 
-from repro.faults import (  # noqa: F401 — re-export, serve-facing names
-    PRUNE_SITES, SERVE_SITES, SITES,
-    DeviceOom, EngineDown, EngineFault, FaultPlan, FaultSpec, InjectedFault,
-    NonFiniteLogits, QueueFull, SnapshotWriteError, StepDeadlineExceeded,
-)
+from repro.faults import *  # noqa: F401,F403 — total re-export shim
 
 __all__ = [
     "SITES", "SERVE_SITES", "PRUNE_SITES",

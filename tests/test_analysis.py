@@ -1,0 +1,576 @@
+"""repro-lint: rule fixtures, suppression/baseline mechanics, self-lint.
+
+Every rule gets at least one fixture-verified true-positive AND
+true-negative (ISSUE 10 acceptance).  Fixtures are tiny synthetic
+``src/repro`` trees under tmp_path so the rules run against exactly the
+pattern under test; the self-lint test then asserts the real repo is
+clean modulo the checked-in baseline.
+"""
+from __future__ import annotations
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.engine import RepoIndex, run_rules
+from repro.analysis.findings import (Baseline, Finding, findings_from_json,
+                                     findings_to_json, suppressed_lines)
+from repro.analysis.rules import RULES
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def make_repo(tmp_path, files: dict[str, str]) -> RepoIndex:
+    src = tmp_path / "src"
+    for rel, text in files.items():
+        p = src / "repro" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return RepoIndex.build(src)
+
+
+def rule_findings(idx: RepoIndex, rule_name: str):
+    return run_rules(idx, [RULES[rule_name]])
+
+
+# ========================================================== jit-purity
+class TestJitPurity:
+    def test_flags_host_rng_and_clock_in_jitted_fn(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import time
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def step(x):
+                noise = np.random.rand()
+                t = time.time()
+                return x * noise * t
+        """})
+        found = rule_findings(idx, "jit-purity")
+        msgs = [f.message for f in found]
+        assert any("numpy.random.rand" in m for m in msgs)
+        assert any("time.time" in m for m in msgs)
+
+    def test_flags_impurity_reached_through_call_graph(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import jax
+            import numpy as np
+
+            def helper(x):
+                return x + np.random.rand()
+
+            @jax.jit
+            def step(x):
+                return helper(x)
+        """})
+        found = rule_findings(idx, "jit-purity")
+        assert len(found) == 1
+        assert found[0].symbol == "helper"
+        assert "traced via" in found[0].message
+
+    def test_flags_tracer_concretization(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def step(x):
+                if bool(jnp.sum(x) > 0):
+                    return x
+                return -x
+        """})
+        found = rule_findings(idx, "jit-purity")
+        assert len(found) == 1
+        assert "concretizes a tracer" in found[0].message
+
+    def test_host_code_not_flagged(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import time
+            import jax
+            import numpy as np
+
+            def host_loop(x):
+                t0 = time.time()
+                return np.random.rand() + x
+
+            @jax.jit
+            def step(x):
+                return x * 2
+        """})
+        assert rule_findings(idx, "jit-purity") == []
+
+    def test_jax_random_is_fine(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import jax
+
+            @jax.jit
+            def step(key, x):
+                return x + jax.random.normal(key, x.shape)
+        """})
+        assert rule_findings(idx, "jit-purity") == []
+
+
+# ====================================================== fault-hook-cost
+_FAULT_REGISTRY = """\
+    SERVE_SITES = ("alpha", "beta")
+    PRUNE_SITES = ("gamma",)
+    SITES = SERVE_SITES + PRUNE_SITES
+
+    class FaultPlan:
+        def fire(self, site):
+            return None
+"""
+
+
+class TestFaultHookCost:
+    def test_clean_registry_all_guarded(self, tmp_path):
+        idx = make_repo(tmp_path, {
+            "faults.py": _FAULT_REGISTRY,
+            "serve/engine.py": """\
+                def step(self):
+                    if self.faults is not None:
+                        f = self.faults.fire("alpha")
+                    if self.faults is not None and \\
+                            self.faults.fire("beta") is not None:
+                        raise RuntimeError
+                def prune(faults):
+                    hit = faults is not None and \\
+                        faults.fire("gamma") is not None
+                    return hit
+            """,
+        })
+        assert rule_findings(idx, "fault-hook-cost") == []
+
+    def test_flags_unguarded_fire(self, tmp_path):
+        idx = make_repo(tmp_path, {
+            "faults.py": _FAULT_REGISTRY,
+            "serve/engine.py": """\
+                def step(self):
+                    self.faults.fire("alpha")
+                    if self.faults is not None:
+                        self.faults.fire("beta")
+                def prune(faults):
+                    if faults is not None:
+                        faults.fire("gamma")
+            """,
+        })
+        found = rule_findings(idx, "fault-hook-cost")
+        assert len(found) == 1
+        assert "not guarded" in found[0].message
+        assert "'alpha'" in found[0].message
+
+    def test_flags_double_and_dead_and_unknown_sites(self, tmp_path):
+        idx = make_repo(tmp_path, {
+            "faults.py": _FAULT_REGISTRY,
+            "serve/engine.py": """\
+                def a(self):
+                    if self.faults is not None:
+                        self.faults.fire("alpha")
+                def b(self):
+                    if self.faults is not None:
+                        self.faults.fire("alpha")
+                        self.faults.fire("nonsite")
+                def c(faults):
+                    if faults is not None:
+                        faults.fire("beta")
+            """,
+        })
+        msgs = [f.message for f in rule_findings(idx, "fault-hook-cost")]
+        assert any("more than one call site" in m for m in msgs)
+        assert any("missing from" in m for m in msgs)         # nonsite
+        assert any("no call site" in m and "'gamma'" in m for m in msgs)
+
+
+# ============================================== serve-never-decompresses
+class TestServeNeverDecompresses:
+    def test_flags_path_from_engine(self, tmp_path):
+        idx = make_repo(tmp_path, {
+            "serve/compressed.py": """\
+                def decompress_params(params):
+                    return params
+            """,
+            "serve/helpers.py": """\
+                from repro.serve.compressed import decompress_params
+                def densify(params):
+                    return decompress_params(params)
+            """,
+            "serve/engine.py": """\
+                from repro.serve.helpers import densify
+                class ServingEngine:
+                    def restore(self, snap):
+                        return densify(snap)
+            """,
+        })
+        found = rule_findings(idx, "serve-never-decompresses")
+        assert len(found) == 1
+        assert "decompress_params" in found[0].message
+        assert found[0].path.endswith("serve/engine.py")
+
+    def test_oracle_use_outside_serve_is_fine(self, tmp_path):
+        idx = make_repo(tmp_path, {
+            "serve/compressed.py": """\
+                def decompress_params(params):
+                    return params
+            """,
+            "serve/engine.py": """\
+                class ServingEngine:
+                    def restore(self, snap):
+                        return snap
+            """,
+            "oracle.py": """\
+                from repro.serve.compressed import decompress_params
+                def check(params):
+                    return decompress_params(params)
+            """,
+        })
+        assert rule_findings(idx, "serve-never-decompresses") == []
+
+
+# ====================================================== atomic-writes
+class TestAtomicWrites:
+    def test_flags_raw_write_open(self, tmp_path):
+        idx = make_repo(tmp_path, {"core/journal.py": """\
+            import json
+            def save(path, obj):
+                with open(path, "w") as f:
+                    json.dump(obj, f)
+        """})
+        found = rule_findings(idx, "atomic-writes")
+        assert len(found) == 1
+        assert 'open(..., "w")' in found[0].message
+
+    def test_mode_keyword_and_binary_flagged(self, tmp_path):
+        idx = make_repo(tmp_path, {"core/journal.py": """\
+            def save(path, data):
+                open(path, mode="wb").write(data)
+        """})
+        assert len(rule_findings(idx, "atomic-writes")) == 1
+
+    def test_read_open_and_io_module_exempt(self, tmp_path):
+        idx = make_repo(tmp_path, {
+            "core/journal.py": """\
+                def load(path):
+                    with open(path) as f:
+                        return f.read()
+            """,
+            "util/io.py": """\
+                def atomic_write_bytes(path, data):
+                    with open(path + ".tmp", "wb") as f:
+                        f.write(data)
+            """,
+        })
+        assert rule_findings(idx, "atomic-writes") == []
+
+
+# ==================================================== recompile-hazards
+class TestRecompileHazards:
+    def test_flags_scalar_param_without_static(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import jax
+
+            @jax.jit
+            def step(x, block_size: int):
+                return x[:block_size]
+        """})
+        found = rule_findings(idx, "recompile-hazards")
+        assert len(found) == 1
+        assert "block_size" in found[0].message
+
+    def test_static_argnames_is_fine(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("block_size",))
+            def step(x, block_size: int):
+                return x[:block_size]
+        """})
+        assert rule_findings(idx, "recompile-hazards") == []
+
+    def test_static_argnums_with_partial_binding(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import functools
+            import jax
+
+            def step(model, x, n: int):
+                return x[:n]
+
+            def make(model):
+                return jax.jit(functools.partial(step, model),
+                               static_argnums=(1,))
+        """})
+        assert rule_findings(idx, "recompile-hazards") == []
+
+    def test_flags_jit_of_lambda_in_function_body(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import jax
+
+            def run(xs):
+                f = jax.jit(lambda x: x * 2)
+                return [f(x) for x in xs]
+        """})
+        found = rule_findings(idx, "recompile-hazards")
+        assert len(found) == 1
+        assert "fresh jitted callable" in found[0].message
+
+    def test_module_level_jit_lambda_is_fine(self, tmp_path):
+        idx = make_repo(tmp_path, {"mod.py": """\
+            import jax
+
+            DOUBLE = jax.jit(lambda x: x * 2)
+        """})
+        assert rule_findings(idx, "recompile-hazards") == []
+
+
+# ==================================================== dtype-discipline
+class TestDtypeDiscipline:
+    def test_flags_dtypeless_numpy_in_traced_core(self, tmp_path):
+        idx = make_repo(tmp_path, {"core/solve.py": """\
+            import jax
+            import numpy as np
+
+            def damp(h):
+                return h + np.eye(h.shape[0])
+
+            @jax.jit
+            def solve(h):
+                return damp(h)
+        """})
+        found = rule_findings(idx, "dtype-discipline")
+        assert len(found) == 1
+        assert "numpy.eye" in found[0].message
+
+    def test_flags_np_linalg_and_f64_in_kernels(self, tmp_path):
+        idx = make_repo(tmp_path, {"kernels/op.py": """\
+            import numpy as np
+
+            def bad_solve(h):
+                lo = np.linalg.cholesky(h)
+                return lo.astype(np.float64)
+        """})
+        msgs = [f.message for f in rule_findings(idx, "dtype-discipline")]
+        assert any("numpy.linalg.cholesky" in m for m in msgs)
+        assert any("numpy.float64" in m for m in msgs)
+
+    def test_explicit_dtype_and_host_core_fine(self, tmp_path):
+        idx = make_repo(tmp_path, {"core/solve.py": """\
+            import jax
+            import numpy as np
+
+            def journal_digest(x):
+                return np.asarray(x)          # host-side, not jit-reachable
+
+            @jax.jit
+            def solve(h):
+                return h * np.float32(2.0)
+        """})
+        assert rule_findings(idx, "dtype-discipline") == []
+
+    def test_reference_oracle_exempt(self, tmp_path):
+        idx = make_repo(tmp_path, {"core/reference.py": """\
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def oracle(h):
+                return np.linalg.inv(np.asarray(h))
+        """})
+        assert rule_findings(idx, "dtype-discipline") == []
+
+
+# ===================================================== import-hygiene
+class TestImportHygiene:
+    def test_flags_partial_shim(self, tmp_path):
+        idx = make_repo(tmp_path, {
+            "faults.py": """\
+                __all__ = ["A", "B", "C"]
+                class A: pass
+                class B: pass
+                class C: pass
+            """,
+            "serve/faults.py": """\
+                from repro.faults import A, B
+                __all__ = ["A", "B"]
+            """,
+        })
+        found = rule_findings(idx, "import-hygiene")
+        assert len(found) == 1
+        assert "missing C" in found[0].message
+
+    def test_star_shim_and_non_shim_fine(self, tmp_path):
+        idx = make_repo(tmp_path, {
+            "faults.py": """\
+                __all__ = ["A", "B", "C"]
+                class A: pass
+                class B: pass
+                class C: pass
+            """,
+            "serve/faults.py": """\
+                from repro.faults import *  # noqa: F401,F403
+                __all__ = ["A", "B"]
+            """,
+            "serve/engine.py": """\
+                from repro.faults import A
+
+                def use():
+                    return A()
+            """,
+        })
+        assert rule_findings(idx, "import-hygiene") == []
+
+
+# ============================================ suppressions and baseline
+class TestSuppressionMechanics:
+    def test_same_line_and_line_above(self):
+        src = ("x = 1  # lint: disable=rule-a\n"
+               "# lint: disable=rule-b\n"
+               "y = 2\n")
+        sup = suppressed_lines(src)
+        assert "rule-a" in sup[1]
+        assert "rule-b" in sup[2] and "rule-b" in sup[3]
+
+    def test_suppression_silences_matching_rule_only(self, tmp_path):
+        idx = make_repo(tmp_path, {"core/journal.py": """\
+            def save(path, obj):
+                # lint: disable=atomic-writes
+                with open(path, "w") as f:
+                    f.write(obj)
+
+            def save2(path, obj):
+                # lint: disable=jit-purity
+                with open(path, "w") as f:
+                    f.write(obj)
+        """})
+        found = rule_findings(idx, "atomic-writes")
+        assert len(found) == 1
+        assert found[0].symbol == "save2"
+
+
+class TestBaselineMechanics:
+    def _finding(self, msg="m", path="src/repro/a.py", line=1):
+        return Finding(path=path, line=line, rule="atomic-writes",
+                       severity="error", message=msg)
+
+    def test_multiset_absorption(self):
+        f1, f2 = self._finding(line=1), self._finding(line=99)
+        base = Baseline.from_findings([f1])      # one entry, two findings
+        fresh = base.new_findings([f1, f2])
+        assert len(fresh) == 1                   # second occurrence is new
+        assert base.stale_entries([f1, f2]) == []
+
+    def test_stale_entry_detection(self):
+        f1 = self._finding("fixed-one")
+        base = Baseline.from_findings([f1, self._finding("still-there")])
+        stale = base.stale_entries([self._finding("still-there")])
+        assert len(stale) == 1
+        assert stale[0]["message"] == "fixed-one"
+
+    def test_fingerprint_stable_across_line_moves(self):
+        assert self._finding(line=3).fingerprint() == \
+            self._finding(line=300).fingerprint()
+
+    def test_json_round_trip(self):
+        fs = [self._finding("a"), self._finding("b", line=7)]
+        doc = findings_to_json(fs)
+        back = findings_from_json(doc)
+        assert back == fs
+        assert json.loads(doc)["findings"][0]["fingerprint"] == \
+            fs[0].fingerprint()
+
+
+# ================================================= self-lint (the repo)
+class TestSelfLint:
+    def test_repo_clean_modulo_baseline(self):
+        idx = RepoIndex.build(REPO_ROOT / "src")
+        findings = run_rules(idx, list(RULES.values()))
+        baseline = Baseline.load(str(REPO_ROOT / "lint_baseline.json"))
+        fresh = baseline.new_findings(findings)
+        assert fresh == [], "\n".join(f.render() for f in fresh)
+        assert baseline.stale_entries(findings) == []
+
+    def test_cli_check_exits_zero(self, tmp_path, capsys):
+        from repro.analysis.__main__ import main
+        out = tmp_path / "findings.json"
+        rc = main(["--no-contracts", "--check", "--root", str(REPO_ROOT),
+                   "--json", str(out)])
+        assert rc == 0
+        doc = json.loads(out.read_text())
+        assert doc["version"] == 1
+
+    def test_cli_rules_subset_and_unknown_rule(self):
+        from repro.analysis.__main__ import main
+        rc = main(["--rules", "atomic-writes,import-hygiene",
+                   "--check", "--root", str(REPO_ROOT)])
+        assert rc == 0
+        with pytest.raises(SystemExit):
+            main(["--rules", "no-such-rule", "--root", str(REPO_ROOT)])
+
+
+# ======================================== layer 2: contract sweep
+class TestContracts:
+    def test_reduced_sweep_clean_on_representative_archs(self):
+        from repro.analysis.contracts import run_contracts
+        fs = run_contracts(archs=("tinyllama-1.1b", "qwen3-moe-30b-a3b"),
+                           reduced=True)
+        assert fs == [], "\n".join(f.render() for f in fs)
+
+    def test_sweep_reports_drift_not_crashes(self, monkeypatch):
+        from repro.analysis import contracts
+        monkeypatch.setattr(
+            "repro.models.model_builder.build_model",
+            lambda cfg: (_ for _ in ()).throw(RuntimeError("boom")))
+        fs = contracts.run_contracts(archs=("tinyllama-1.1b",))
+        assert any(f.rule == "contract-sweep-error" for f in fs)
+
+    @pytest.mark.slow
+    def test_full_zoo_sweep_clean_under_budget(self):
+        import time
+        from repro.analysis.contracts import run_contracts
+        t0 = time.monotonic()
+        fs = run_contracts(repo_root=str(REPO_ROOT))
+        dt = time.monotonic() - t0
+        assert fs == [], "\n".join(f.render() for f in fs)
+        assert dt < 60, f"contract sweep took {dt:.1f}s (budget 60s)"
+
+
+# ============================== the wkv_b residency-downgrade fix
+class TestNonStreamableKernels:
+    def test_abstract_nm_keeps_wkv_b_dense(self):
+        from repro.configs import registry
+        from repro.core.sparsity import NmCompressed
+        from repro.launch.steps import abstract_nm_params
+        from repro.models.model_builder import build_model
+
+        model = build_model(registry.get_config("deepseek-v3-671b",
+                                                reduced=True))
+        a_nm = abstract_nm_params(model, 2, 4)
+
+        def walk(node, path=()):
+            if isinstance(node, dict):
+                for k, v in node.items():
+                    yield from walk(v, path + (k,))
+            else:
+                yield path, node
+
+        wkv_b = [leaf for path, leaf in walk(a_nm) if "wkv_b" in path]
+        assert wkv_b and not any(
+            isinstance(v, NmCompressed) for v in wkv_b)
+        assert any(isinstance(leaf, NmCompressed)
+                   for _p, leaf in walk(a_nm))
+
+    def test_compress_params_downgrades_wkv_b(self):
+        import jax.numpy as jnp
+        from repro.serve.compressed import (CompressionDowngrade,
+                                            compress_params)
+
+        params = {"attn": {"wkv_b": {"w": jnp.ones((8, 4))}}}
+        mask = jnp.zeros((8, 4)).at[::2, :].set(1.0)
+        masks = {("attn", "wkv_b", "w"): mask}
+        with pytest.warns(CompressionDowngrade, match="SERVE DENSE"):
+            out = compress_params(params, masks, 2, 4)
+        assert isinstance(out["attn"]["wkv_b"]["w"], jnp.ndarray)
+        with pytest.raises(ValueError, match="SERVE DENSE"):
+            compress_params(params, masks, 2, 4, strict=True)
